@@ -1,0 +1,60 @@
+"""Fig 2 + Fig 3: the model pool's accuracy/latency frontier and the
+ISO-latency / ISO-accuracy candidate sets."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, print_rows, write_artifact
+from repro.core.profiles import iso_accuracy_set, iso_latency_set, model_pool
+
+
+def run() -> bool:
+    t0 = time.perf_counter()
+    pool = model_pool()
+    rows: List[Row] = []
+
+    # Fig 2: a non-degenerate accuracy<->latency/cost trade-off must exist:
+    # the cheapest model is not the most accurate, and picking more
+    # accuracy costs more (over the pareto set).
+    by_cost = sorted(pool.values(), key=lambda e: e["cost_per_1k"])
+    pareto = []
+    best_acc = -1.0
+    for e in by_cost:
+        if e["accuracy"] > best_acc:
+            pareto.append(e)
+            best_acc = e["accuracy"]
+    rows.append(("pareto_size", len(pareto), "frontier has >=4 rungs", len(pareto) >= 4))
+    accs = [e["accuracy"] for e in pareto]
+    costs = [e["cost_per_1k"] for e in pareto]
+    rows.append((
+        "frontier_monotone", 1.0,
+        "cost rises with accuracy along the frontier",
+        all(a < b for a, b in zip(accs, accs[1:]))
+        and all(a < b for a, b in zip(costs, costs[1:])),
+    ))
+
+    # Fig 3a: ISO-latency 500 ms — multiple models, different accuracies
+    iso_lat = iso_latency_set(0.5)
+    accs_iso = sorted(e["accuracy"] for e in iso_lat.values())
+    rows.append((
+        "iso_latency_candidates", len(iso_lat),
+        ">=3 models satisfy a 500 ms bound with spread accuracy",
+        len(iso_lat) >= 3 and accs_iso[-1] - accs_iso[0] > 0.2,
+    ))
+
+    # Fig 3b: ISO-accuracy 60% — multiple models, different latencies
+    iso_acc = iso_accuracy_set(0.6)
+    lats_iso = sorted(e["latency_s"] for e in iso_acc.values())
+    rows.append((
+        "iso_accuracy_candidates", len(iso_acc),
+        ">=3 models reach 60% acc with spread latency",
+        len(iso_acc) >= 3 and lats_iso[-1] / lats_iso[0] > 2.0,
+    ))
+
+    write_artifact("fig2_model_pool", {"pool": pool, "pareto": pareto})
+    return print_rows("fig2", rows, t0)
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

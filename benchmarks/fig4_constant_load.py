@@ -1,0 +1,65 @@
+"""Fig 4: reserved slices vs burst pool under CONSTANT request rates.
+
+The paper's claim (VMs always cheaper at 10/50/100/200 req/s) holds in
+its utilization regime — its CNN VMs served ~10 req/s each.  Our slices
+serve 10-400 req/s, so we evaluate at per-slice-throughput multiples AND
+at the paper's absolute rates, reporting the under-utilization crossover
+the paper's scale never exposes (EXPERIMENTS.md §Paper-claims, delta D1).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import List
+
+from benchmarks.common import Row, print_rows, write_artifact
+from repro.core.hardware import PRICING
+from repro.core.profiles import model_pool
+
+
+def run() -> bool:
+    t0 = time.perf_counter()
+    pool = model_pool()
+    rows: List[Row] = []
+    table = {}
+
+    # paper regime: constant load that keeps slices utilized
+    ok_util = True
+    worst = 0.0
+    for mult in (1.0, 2.0, 4.0, 8.0):
+        for arch, e in pool.items():
+            rate = mult * e["throughput_rps"]
+            n = math.ceil(rate / e["throughput_rps"])
+            vm = n * e["chips"] * PRICING.reserved_chip_hour
+            burst = rate * 3600 * e["burst_cost_per_req"]
+            table[f"{arch}@{mult}x"] = {"vm": vm, "burst": burst}
+            ok_util &= vm < burst
+            worst = max(worst, vm / burst)
+    rows.append((
+        "vm_cheaper_when_utilized", worst,
+        "VM/burst cost ratio < 1 at all utilized constant rates",
+        ok_util,
+    ))
+
+    # the paper's absolute rates, for the record (crossover visible)
+    crossover = 0
+    for rate in (10, 50, 100, 200):
+        for arch, e in pool.items():
+            n = math.ceil(rate / e["throughput_rps"])
+            vm = n * e["chips"] * PRICING.reserved_chip_hour
+            burst = rate * 3600 * e["burst_cost_per_req"]
+            table[f"{arch}@{rate}rps"] = {"vm": vm, "burst": burst}
+            if burst < vm:
+                crossover += 1
+    rows.append((
+        "underutilized_crossovers", crossover,
+        "burst wins exist only at deep under-utilization (delta D1)",
+        crossover > 0,
+    ))
+
+    write_artifact("fig4_constant_load", table)
+    return print_rows("fig4", rows, t0)
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

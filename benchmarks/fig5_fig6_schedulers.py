@@ -1,0 +1,107 @@
+"""Fig 5 + Fig 6: autoscaling schemes under trace-driven dynamic load.
+
+Fig 5 — util_aware / exascale over-provision 20-30% more VM capacity than
+        the reactive baseline.
+Fig 6 — their cost is correspondingly higher; mixed procurement holds
+        cost near reactive while slashing SLO violations.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import (
+    DURATION_S,
+    MEAN_RPS,
+    PRICING_X,
+    Row,
+    SERVING_POOL,
+    STRICT_FRAC,
+    print_rows,
+    write_artifact,
+)
+from repro.core.schedulers import SCHEDULERS
+from repro.core.simulator import simulate, uniform_pool_workload
+from repro.core.traces import TRACES, get_trace
+
+
+def run() -> bool:
+    t0 = time.perf_counter()
+    wl = uniform_pool_workload(SERVING_POOL, strict_frac=STRICT_FRAC)
+    results: Dict[str, Dict[str, dict]] = {}
+    for trace_name in TRACES:
+        trace = get_trace(trace_name, DURATION_S, mean_rps=MEAN_RPS)
+        results[trace_name] = {}
+        for sched, cls in SCHEDULERS.items():
+            r = simulate(trace, wl, cls(), pricing=PRICING_X)
+            results[trace_name][sched] = {
+                **r.summary(),
+                "chip_seconds": r.chip_seconds,
+                "violations": r.violations,
+            }
+
+    rows: List[Row] = []
+    dynamic = [t for t in TRACES if t != "wiki"]
+
+    # Fig 5: over-provisioned capacity vs reactive on dynamic traces
+    for name in ("util_aware", "exascale"):
+        ratios = [
+            results[t][name]["chip_seconds"] / results[t]["reactive"]["chip_seconds"]
+            for t in dynamic
+        ]
+        mean_over = sum(ratios) / len(ratios) - 1.0
+        rows.append((
+            f"fig5_{name}_overprovision", mean_over,
+            "paper: 20-30% over-provisioned VMs (band 10-65%)",
+            0.10 < mean_over < 0.65,
+        ))
+
+    # Fig 6: cost normalized to reactive + SLO violations
+    for t in TRACES:
+        for name in SCHEDULERS:
+            c = results[t][name]["cost_total"] / results[t]["reactive"]["cost_total"]
+            results[t][name]["cost_vs_reactive"] = c
+
+    mixed_cost = max(results[t]["mixed"]["cost_vs_reactive"] for t in dynamic)
+    rows.append((
+        "fig6_mixed_cost_vs_reactive", mixed_cost,
+        "mixed stays within ~25% of reactive cost",
+        mixed_cost < 1.30,
+    ))
+    viol_red = min(
+        1 - results[t]["mixed"]["violation_rate"]
+        / max(results[t]["reactive"]["violation_rate"], 1e-9)
+        for t in dynamic
+    )
+    rows.append((
+        "fig6_mixed_violation_reduction", viol_red,
+        "paper: mixed cuts SLO violations by >= 60%",
+        viol_red >= 0.60,
+    ))
+    cheaper_than_spares = all(
+        results[t]["mixed"]["cost_total"] < results[t]["util_aware"]["cost_total"]
+        for t in dynamic
+    )
+    rows.append((
+        "fig6_mixed_beats_overprovisioning", 1.0,
+        "mixed cheaper than holding spare VMs on dynamic traces",
+        cheaper_than_spares,
+    ))
+
+    # Observation 4 via Fig 6: wiki (peak/median ~1.3) gains nothing
+    wiki_burst_frac = (
+        results["wiki"]["mixed"]["served_burst"]
+        / max(results["wiki"]["mixed"]["served_vm"], 1.0)
+    )
+    rows.append((
+        "fig6_wiki_burst_fraction", wiki_burst_frac,
+        "flat trace -> mixed offloads ~nothing (Observation 4)",
+        wiki_burst_frac < 0.02,
+    ))
+
+    write_artifact("fig5_fig6_schedulers", results)
+    return print_rows("fig5_fig6", rows, t0)
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -1,0 +1,32 @@
+"""Fig 7: peak-to-median ratios of the four trace twins."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, print_rows, write_artifact
+from repro.core.traces import trace_stats
+
+
+def run() -> bool:
+    t0 = time.perf_counter()
+    stats = trace_stats()
+    rows: List[Row] = []
+    rows.append((
+        "wiki_peak_to_median", stats["wiki"]["peak_to_median"],
+        "paper: wiki low (~1.3) -> mixed will not pay off",
+        stats["wiki"]["peak_to_median"] < 1.6,
+    ))
+    for name in ("berkeley", "wits", "twitter"):
+        v = stats[name]["peak_to_median"]
+        rows.append((
+            f"{name}_peak_to_median", v,
+            "paper: >50% peak-over-median (ratio > 2)",
+            v > 2.0,
+        ))
+    write_artifact("fig7_traces", stats)
+    return print_rows("fig7", rows, t0)
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

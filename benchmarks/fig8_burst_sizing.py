@@ -1,0 +1,58 @@
+"""Fig 8: the burst-instance sizing knob (the Lambda memory-allocation
+analog).  More chips -> lower latency (sublinearly, collectives + Amdahl)
+-> higher $/request; past the knee latency stops improving but cost keeps
+rising — exactly the squeezenet@2GB footnote."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, print_rows, write_artifact
+from repro.core.profiles import STANDARD, ModelProfile, get_profile
+from repro.core.hardware import PRICING
+
+MODELS = ["qwen1.5-0.5b", "llama3-8b", "qwen2-72b"]
+MULTS = (1, 2, 4, 8, 16)
+
+
+def run() -> bool:
+    t0 = time.perf_counter()
+    table = {}
+    rows: List[Row] = []
+    for arch in MODELS:
+        base = get_profile(arch)
+        base_chips = ModelProfile(base.cfg, 1).min_chips
+        entries = []
+        for m in MULTS:
+            p = ModelProfile(base.cfg, base_chips * m)
+            lat = p.request_latency(STANDARD, 1)
+            cost = (
+                lat * p.chips * PRICING.reserved_chip_s * PRICING.burst_premium
+                * 1e6  # $/1M requests if billed at raw busy time
+            )
+            entries.append({"chips": p.chips, "latency_s": lat, "cost_1m": cost})
+        table[arch] = entries
+
+        lats = [e["latency_s"] for e in entries]
+        costs = [e["cost_1m"] for e in entries]
+        monotone_lat = all(a >= b - 1e-9 for a, b in zip(lats, lats[1:]))
+        cost_up = costs[-1] > costs[0]
+        # knee: the last doubling buys < 15% latency, the first > 25%
+        first_gain = 1 - lats[1] / lats[0]
+        last_gain = 1 - lats[-1] / lats[-2]
+        rows.append((
+            f"{arch}_latency_falls", first_gain,
+            "latency falls with slice size",
+            monotone_lat and first_gain > 0.2,
+        ))
+        rows.append((
+            f"{arch}_knee", last_gain,
+            "diminishing returns past the knee, cost keeps rising",
+            last_gain < first_gain and cost_up,
+        ))
+    write_artifact("fig8_burst_sizing", table)
+    return print_rows("fig8", rows, t0)
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

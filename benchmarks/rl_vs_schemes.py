@@ -1,0 +1,62 @@
+"""Beyond-paper (§V implemented): PPO controller vs the hand-built schemes.
+
+Trains on the twitter trace, evaluates on a held-out berkeley seed; the
+blended objective is cost + lambda * violations (the paper's
+multi-objective reward)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, print_rows, write_artifact
+from repro.core.rl.env import EnvConfig, ServingEnv
+from repro.core.rl.ppo import PPOConfig, evaluate_policy, train_ppo
+from repro.core.schedulers import SCHEDULERS
+from repro.core.simulator import ArchLoad, simulate
+from repro.core.traces import get_trace
+
+PENALTY = 0.02
+ARCH = "llama3-8b"
+
+
+def run(iterations: int = 50) -> bool:
+    t0 = time.perf_counter()
+    envcfg = EnvConfig(arch=ARCH, duration_s=1200, mean_rps=60,
+                       violation_penalty=PENALTY)
+    train_trace = get_trace("twitter", 1200, mean_rps=60)
+    eval_trace = get_trace("berkeley", 1200, mean_rps=60, seed=7)
+
+    state = train_ppo(ServingEnv(envcfg, train_trace),
+                      PPOConfig(iterations=iterations))
+
+    obj = lambda r: r.cost_total + PENALTY * r.violations  # noqa: E731
+    wl = [ArchLoad(ARCH, 1.0, 0.25)]
+    table = {}
+    for name, cls in SCHEDULERS.items():
+        r = simulate(eval_trace, wl, cls())
+        table[name] = {**r.summary(), "objective": obj(r)}
+    r = evaluate_policy(ServingEnv(envcfg, eval_trace), state.params, seed=11)
+    table["ppo"] = {**r.summary(), "objective": obj(r)}
+    table["_train"] = {"best_rollout_reward": state.best_reward,
+                       "iterations": iterations}
+
+    rows: List[Row] = []
+    rows.append((
+        "ppo_objective", table["ppo"]["objective"],
+        "PPO beats reactive on the blended objective",
+        table["ppo"]["objective"] < table["reactive"]["objective"],
+    ))
+    rows.append((
+        "ppo_vs_best_hand_policy",
+        table["ppo"]["objective"]
+        / min(table[n]["objective"] for n in SCHEDULERS),
+        "PPO within 1.5x of the best hand-built scheme (held-out trace)",
+        table["ppo"]["objective"]
+        <= 1.5 * min(table[n]["objective"] for n in SCHEDULERS),
+    ))
+    write_artifact("rl_vs_schemes", table)
+    return print_rows("rl", rows, t0)
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -1,0 +1,141 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape),
+derived from the dry-run's compiled artifacts.
+
+``compiled.cost_analysis()`` reports the PER-DEVICE post-SPMD module, so:
+
+  compute_term    = flops / (peak_flops_per_chip * MFU-free)   [s]
+  memory_term     = bytes_accessed / hbm_bw_per_chip           [s]
+  collective_term = collective_bytes / ici_bw_per_chip         [s]
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(2 usable links per transfer direction assumed -> 100 GB/s effective).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for training;
+2*N*D for inference steps.  The ratio MODEL_FLOPS / (flops * chips)
+flags remat/redundant compute.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row, print_rows, write_artifact
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 100e9          # 2 links x ~50 GB/s usable per exchange
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.params_active
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyse(rec: dict) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    chips = rec["n_devices"]
+    flops = rec["flops"]
+    if flops < 0:
+        return None
+    compute = flops / PEAK
+    memory = rec["bytes_accessed"] / HBM
+    coll = rec["collectives"]["total"] / ICI
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(flops * chips, 1.0)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": "x".join(map(str, rec["mesh"])),
+        "chips": chips,
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": coll,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "collective_detail": rec["collectives"],
+    }
+
+
+def load_table(pod: str = "pod1") -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{pod}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyse(rec)
+        if row:
+            out.append(row)
+    return out
+
+
+def render_markdown(table: List[dict]) -> str:
+    lines = [
+        "| arch | shape | chips | compute s | memory s | collective s | "
+        "dominant | useful-FLOPs ratio |",
+        "|---|---|---:|---:|---:|---:|---|---:|",
+    ]
+    for r in sorted(table, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_flops_ratio']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> bool:
+    t0 = time.perf_counter()
+    table = load_table("pod1")
+    rows: List[Row] = []
+    if not table:
+        print("roofline,_skipped,0,run launch/dryrun.py --all first,OK")
+        return True
+    rows.append((
+        "combos_analysed", len(table),
+        "all 40 (arch x shape) combos have roofline terms",
+        len(table) >= 40,
+    ))
+    # structural expectations
+    decode = [r for r in table if r["shape"] in ("decode_32k", "long_500k")]
+    mem_bound = sum(r["dominant"] in ("memory", "collective") for r in decode)
+    rows.append((
+        "decode_memory_or_coll_bound", mem_bound / max(len(decode), 1),
+        "decode shapes are never compute-bound (roofline sanity)",
+        all(r["dominant"] != "compute" for r in decode),
+    ))
+    for r in table:
+        print(
+            f"roofline_row,{r['arch']},{r['shape']},{r['chips']},"
+            f"{r['compute_s']:.3e},{r['memory_s']:.3e},{r['collective_s']:.3e},"
+            f"{r['dominant']},{r['useful_flops_ratio']:.3f}"
+        )
+    write_artifact("roofline_table", table)
+    md_path = os.path.join(DRYRUN_DIR, "..", "roofline.md")
+    with open(os.path.abspath(md_path), "w") as f:
+        f.write(render_markdown(table) + "\n")
+    return print_rows("roofline", rows, t0)
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -1,0 +1,77 @@
+"""Quickstart: the whole stack in one script (CPU, ~2 minutes).
+
+1. Characterize the model pool (the paper's Fig-2 table, derived).
+2. Serve a small model with continuously-batched requests.
+3. Run the paper's procurement schemes on a flash-crowd trace.
+4. Pick models with Paragon selection vs the naive baseline.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (
+    Constraint,
+    get_trace,
+    model_pool,
+    selection_cost,
+    simulate,
+    uniform_pool_workload,
+)
+from repro.core.schedulers import SCHEDULERS
+from repro.models import model as model_lib
+from repro.serving import ContinuousBatcher, Engine, EngineConfig, Request
+
+
+def main() -> None:
+    # ------------------------------------------------------------- 1. pool
+    print("=== 1. model pool (accuracy / latency / cost, derived) ===")
+    pool = model_pool()
+    for a, e in sorted(pool.items(), key=lambda kv: kv[1]["latency_s"]):
+        print(f"  {a:26s} acc={e['accuracy']:.3f} lat={e['latency_s']*1e3:7.1f}ms "
+              f"chips={e['chips']:3d} $/1k={e['cost_per_1k']:.4f}")
+
+    # ------------------------------------------------------------ 2. serve
+    print("\n=== 2. continuous-batching engine (reduced llama3-8b) ===")
+    cfg = get_config("llama3-8b").reduced()
+    params = model_lib.init_params(cfg, jax.random.key(0))
+    engine = Engine(cfg, params, EngineConfig(slots=4, cache_len=64, max_new_tokens=8))
+    batcher = ContinuousBatcher(engine)
+    rng = np.random.default_rng(0)
+    for i in range(12):
+        prompt = rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+        batcher.submit(Request(rid=i, prompt=prompt, max_new_tokens=8))
+    stats = batcher.run_until_idle()
+    print(f"  {stats.summary()}")
+
+    # -------------------------------------------------------- 3. schedulers
+    print("\n=== 3. procurement schemes on the berkeley trace ===")
+    trace = get_trace("berkeley", 1200, mean_rps=200)
+    wl = uniform_pool_workload(
+        ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b"], strict_frac=0.25
+    )
+    base = None
+    for name, cls in SCHEDULERS.items():
+        r = simulate(trace, wl, cls())
+        base = base or r
+        print(f"  {name:11s} cost={r.cost_total:7.3f} "
+              f"({r.cost_total / base.cost_total:4.2f}x reactive) "
+              f"SLO-violations={r.violation_rate * 100:5.2f}%")
+
+    # --------------------------------------------------- 4. model selection
+    print("\n=== 4. model selection: naive vs paragon ===")
+    rng = np.random.default_rng(1)
+    cons = [
+        Constraint(float(rng.uniform(0.3, 0.85)), float(rng.uniform(0.3, 2.0)))
+        for _ in range(100)
+    ]
+    n = selection_cost(cons, "naive")
+    p = selection_cost(cons, "paragon")
+    print(f"  naive   cost={n['cost']:7.3f} (delivered acc {n['mean_accuracy']:.3f})")
+    print(f"  paragon cost={p['cost']:7.3f} (delivered acc {p['mean_accuracy']:.3f})")
+    print(f"  paragon is {(1 - p['cost'] / n['cost']) * 100:.1f}% cheaper")
+
+
+if __name__ == "__main__":
+    main()

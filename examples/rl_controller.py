@@ -1,0 +1,56 @@
+"""Scenario: train the §V PPO controller and face it off against the
+hand-built schemes on a held-out trace (CPU, ~2-4 minutes).
+
+  PYTHONPATH=src python examples/rl_controller.py --iterations 60
+"""
+import argparse
+
+from repro.core import get_trace, simulate
+from repro.core.rl import EnvConfig, PPOConfig, ServingEnv, train_ppo
+from repro.core.rl.ppo import evaluate_policy
+from repro.core.schedulers import SCHEDULERS
+from repro.core.simulator import ArchLoad
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--train-trace", default="twitter")
+    ap.add_argument("--eval-trace", default="berkeley")
+    ap.add_argument("--iterations", type=int, default=60)
+    ap.add_argument("--mean-rps", type=float, default=60.0)
+    ap.add_argument("--duration", type=int, default=1200)
+    ap.add_argument("--penalty", type=float, default=0.02)
+    args = ap.parse_args()
+
+    envcfg = EnvConfig(
+        arch=args.arch, duration_s=args.duration, mean_rps=args.mean_rps,
+        violation_penalty=args.penalty,
+    )
+    train_tr = get_trace(args.train_trace, args.duration, mean_rps=args.mean_rps)
+    eval_tr = get_trace(args.eval_trace, args.duration, mean_rps=args.mean_rps,
+                        seed=7)
+
+    print(f"[rl] training PPO on {args.train_trace} "
+          f"({args.iterations} iterations)...", flush=True)
+    state = train_ppo(
+        ServingEnv(envcfg, train_tr), PPOConfig(iterations=args.iterations),
+        verbose=True,
+    )
+    print(f"[rl] best rollout reward {state.best_reward:.2f}")
+
+    obj = lambda r: r.cost_total + args.penalty * r.violations  # noqa: E731
+    wl = [ArchLoad(args.arch, 1.0, 0.25)]
+    print(f"\n[rl] evaluation on held-out {args.eval_trace}:")
+    print(f"  {'scheme':12s} {'cost $':>8s} {'viol %':>7s} {'objective':>10s}")
+    for name, cls in SCHEDULERS.items():
+        r = simulate(eval_tr, wl, cls())
+        print(f"  {name:12s} {r.cost_total:8.3f} {r.violation_rate*100:7.2f} "
+              f"{obj(r):10.3f}")
+    r = evaluate_policy(ServingEnv(envcfg, eval_tr), state.params, seed=11)
+    print(f"  {'ppo':12s} {r.cost_total:8.3f} {r.violation_rate*100:7.2f} "
+          f"{obj(r):10.3f}   <- learned")
+
+
+if __name__ == "__main__":
+    main()

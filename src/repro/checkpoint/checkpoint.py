@@ -1,0 +1,87 @@
+"""Numpy-based checkpointing: pytrees -> flat key/value .npz + metadata.
+
+Atomic (write-to-temp, rename), step-indexed, restartable.  No orbax
+dependency; works for any pytree of arrays (params, optimizer state,
+PPO agents, simulator RNG state).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "__/__"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_key_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # npz has no codec for ml_dtypes; store the raw bits — the
+            # restore template's dtype recovers the view
+            arr = arr.view(np.uint16)
+        flat[key] = arr
+    return flat
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return f"k:{p.key}"
+    if hasattr(p, "idx"):
+        return f"i:{p.idx}"
+    return f"s:{p}"
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, *, name: str = "state") -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree.structure(tree)
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        meta = os.path.join(directory, f"{name}_{step:08d}.json")
+        with open(meta + ".tmp", "w") as f:
+            json.dump({"step": step, "treedef": str(treedef)}, f)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+        os.replace(meta + ".tmp", meta)
+    finally:
+        for leftover in (tmp, tmp + ".npz"):
+            if os.path.exists(leftover):
+                os.remove(leftover)
+    return path
+
+
+def restore_checkpoint(directory: str, step: int, like: Any, *, name: str = "state") -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    data = np.load(path)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat_like:
+        key = _SEP.join(_key_str(x) for x in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        want = np.dtype(leaf.dtype)
+        if arr.dtype == np.uint16 and want.itemsize == 2 and want.kind == "V" or (
+            arr.dtype == np.uint16 and want.name == "bfloat16"
+        ):
+            arr = arr.view(want)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree.unflatten(jax.tree.structure(like), leaves)
+
+
+def latest_step(directory: str, *, name: str = "state") -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    pat = re.compile(rf"{re.escape(name)}_(\d+)\.npz$")
+    steps = [int(m.group(1)) for f in os.listdir(directory) if (m := pat.match(f))]
+    return max(steps) if steps else None

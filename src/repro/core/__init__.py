@@ -1,0 +1,38 @@
+"""The paper's contribution: a self-managed ML inference serving system.
+
+Layers:
+  hardware         — TPU v5e machine model + fleet pricing (VM/serverless analog)
+  profiles         — derived offline-profiling table (latency/accuracy/cost)
+  traces           — statistical twins of the four request-arrival traces
+  load_monitor     — windowed peak-to-median estimation (Observation 4)
+  simulator        — trace-driven discrete-event serving simulator
+  schedulers       — reactive / util_aware / exascale / mixed / paragon
+  model_selection  — naive vs paragon (least-cost under constraints)
+  rl               — PPO controller (§V, implemented beyond the paper)
+"""
+from repro.core.hardware import PRICING, V5E, ChipSpec, FleetPricing  # noqa: F401
+from repro.core.load_monitor import LoadMonitor  # noqa: F401
+from repro.core.model_selection import (  # noqa: F401
+    Constraint,
+    select_naive,
+    select_paragon,
+    selection_cost,
+)
+from repro.core.profiles import (  # noqa: F401
+    ModelProfile,
+    RequestClass,
+    get_profile,
+    iso_accuracy_set,
+    iso_latency_set,
+    model_pool,
+)
+from repro.core.schedulers import SCHEDULERS, get_scheduler  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    Action,
+    ArchLoad,
+    ArchObs,
+    SimResult,
+    simulate,
+    uniform_pool_workload,
+)
+from repro.core.traces import TRACES, get_trace, peak_to_median, trace_stats  # noqa: F401

@@ -1,0 +1,55 @@
+"""Load monitor (paper §III-B2).
+
+Watches the arrival stream in sliding sampling windows and exposes the
+statistics the procurement policies plug into: smoothed rate (EWMA),
+windowed peak, and the peak-to-median ratio that Observation 4 says
+predicts whether mixed procurement pays off.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Optional
+
+import numpy as np
+
+
+@dataclass
+class LoadMonitor:
+    window_s: int = 300
+    ewma_alpha: float = 0.3
+    _hist: Deque[float] = field(default_factory=deque)
+    _ewma: Optional[float] = None
+
+    def observe(self, rate: float) -> None:
+        self._hist.append(float(rate))
+        while len(self._hist) > self.window_s:
+            self._hist.popleft()
+        self._ewma = (
+            rate
+            if self._ewma is None
+            else self.ewma_alpha * rate + (1 - self.ewma_alpha) * self._ewma
+        )
+
+    @property
+    def rate(self) -> float:
+        """Smoothed current arrival rate (req/s)."""
+        return self._ewma or 0.0
+
+    @property
+    def peak(self) -> float:
+        return max(self._hist) if self._hist else 0.0
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self._hist)) if self._hist else 0.0
+
+    @property
+    def peak_to_median(self) -> float:
+        """Observation-4 statistic over the sampling window."""
+        m = self.median
+        return self.peak / m if m > 0 else 1.0
+
+    def bursty(self, threshold: float = 1.5) -> bool:
+        """True when the window shows spike structure worth offloading."""
+        return len(self._hist) >= self.window_s // 4 and self.peak_to_median >= threshold

@@ -1,0 +1,2 @@
+from repro.core.rl.env import ServingEnv, EnvConfig  # noqa: F401
+from repro.core.rl.ppo import PPOConfig, PPOState, train_ppo, policy_action  # noqa: F401

@@ -1,0 +1,124 @@
+"""The serving simulator as an RL environment (paper §V, Figure 10).
+
+The agent observes the system state o_i, takes action a_i (a joint
+procurement decision: fleet delta x offload mode), reaches actual state
+f_{i+1}, and receives a transition reward blending the paper's reward
+policies: cost, response latency (violations), and utilization.
+
+Observation (per tick, single-arch fleet, normalized):
+  [rate, ewma, peak/median, queue_strict, queue_relaxed,
+   n_active, n_pending, utilization, trend]
+
+Action space (discrete, 4 headrooms x 3 offload modes = 12):
+  headroom in {0.85, 1.0, 1.15, 1.4} — reserved target is
+      ceil(headroom x demand / per-instance-throughput), where demand
+      includes the queued backlog.  Bounded action -> stable credit
+      assignment despite the 120 s provisioning lag (the paper's "adjusts
+      its policy as long as it is within the desired policy target range").
+  offload in {none, blind, slack_aware}
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.hardware import PRICING, FleetPricing
+from repro.core.simulator import Action, ArchLoad, ServingSim
+
+HEADROOMS = (0.85, 1.0, 1.15, 1.4)
+OFFLOADS = ("none", "blind", "slack_aware")
+N_ACTIONS = len(HEADROOMS) * len(OFFLOADS)
+OBS_DIM = 10
+
+
+@dataclass(frozen=True)
+class EnvConfig:
+    arch: str = "llama3-8b"
+    strict_frac: float = 0.25
+    mean_rps: float = 60.0
+    duration_s: int = 1200
+    violation_penalty: float = 0.005      # $ equivalent per violated request
+    reward_scale: float = 100.0           # keep per-tick rewards O(0.1)
+    pricing: FleetPricing = PRICING
+    rate_scale: float = 100.0             # normalization constants
+    fleet_scale: float = 10.0
+
+
+class ServingEnv:
+    """Gym-like wrapper over :class:`ServingSim` for a single-arch fleet."""
+
+    def __init__(self, cfg: EnvConfig, trace: np.ndarray):
+        self.cfg = cfg
+        self.base_trace = trace
+        self.sim: Optional[ServingSim] = None
+        self._target = 1
+        self._prev_rate = 0.0
+        self._last_violations = 0.0
+
+    # ------------------------------------------------------------------
+    def reset(self, trace: Optional[np.ndarray] = None) -> np.ndarray:
+        tr = self.base_trace if trace is None else trace
+        self.sim = ServingSim(
+            tr,
+            [ArchLoad(self.cfg.arch, 1.0, self.cfg.strict_frac)],
+            pricing=self.cfg.pricing,
+        )
+        st = next(iter(self.sim.states.values()))
+        self._target = st.n_active
+        self._prev_rate = float(tr[0])
+        self._last_violations = 0.0
+        return self._obs_vector(self.sim.observe())
+
+    def _obs_vector(self, obs_dict) -> np.ndarray:
+        o = obs_dict[self.cfg.arch]
+        st = self.sim.states[self.cfg.arch]
+        rs, fs = self.cfg.rate_scale, self.cfg.fleet_scale
+        vec = np.array(
+            [
+                o.rate / rs,
+                o.ewma_rate / rs,
+                min(o.peak_to_median, 5.0) / 5.0,
+                st.queues["strict"].total / rs,
+                st.queues["relaxed"].total / rs,
+                o.n_active / fs,
+                o.n_pending / fs,
+                min(o.utilization, 2.0) / 2.0,
+                (o.rate - self._prev_rate) / rs,
+                self._last_violations / rs,
+            ],
+            dtype=np.float32,
+        )
+        self._prev_rate = o.rate
+        return vec
+
+    # ------------------------------------------------------------------
+    def step(self, action: int) -> Tuple[np.ndarray, float, bool, dict]:
+        assert self.sim is not None, "call reset() first"
+        headroom = HEADROOMS[action // len(OFFLOADS)]
+        offload = OFFLOADS[action % len(OFFLOADS)]
+        st = self.sim.states[self.cfg.arch]
+        backlog = st.queues["strict"].total + st.queues["relaxed"].total
+        demand = st.monitor.rate + backlog / 5.0
+        self._target = max(1, math.ceil(headroom * demand / st.throughput))
+        metrics = self.sim.apply(
+            {self.cfg.arch: Action(target=self._target, offload=offload)}
+        )
+        self._last_violations = metrics["violations"]
+        reward = -self.cfg.reward_scale * (
+            metrics["cost"] + self.cfg.violation_penalty * metrics["violations"]
+        )
+        done = self.sim.done
+        obs = (
+            np.zeros(OBS_DIM, dtype=np.float32)
+            if done
+            else self._obs_vector(self.sim.observe())
+        )
+        return obs, float(reward), done, metrics
+
+    # ------------------------------------------------------------------
+    def episode_result(self):
+        return self.sim.res

@@ -1,0 +1,259 @@
+"""Proximal Policy Optimization in pure JAX (paper §V).
+
+The paper sketches a PPO controller with the clipped surrogate
+L(theta) = E_t[min(r_t A_t, clip(r_t, 1-eps, 1+eps) A_t)] over scheduling
+decisions; we implement the full loop: MLP policy+value nets, GAE(lambda)
+advantages, minibatched clipped updates with Adam, entropy bonus.
+
+The environment is the Python-side serving simulator; the nets, GAE and
+the update step are jitted JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rl.env import N_ACTIONS, OBS_DIM, ServingEnv
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    hidden: int = 64
+    lr: float = 5e-4
+    gamma: float = 0.97
+    gae_lambda: float = 0.95
+    clip_eps: float = 0.2
+    entropy_coef: float = 0.01
+    value_coef: float = 0.5
+    epochs: int = 4
+    minibatches: int = 8
+    rollout_len: int = 1200        # cover a full episode -> every update
+                                   # sees flash-crowd segments
+    iterations: int = 60
+    max_grad_norm: float = 0.5
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Networks.
+# ---------------------------------------------------------------------------
+def init_net(key, cfg: PPOConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    h = cfg.hidden
+
+    def lin(k, i, o, scale):
+        return {
+            "w": scale * jax.random.normal(k, (i, o)) / jnp.sqrt(i),
+            "b": jnp.zeros((o,)),
+        }
+
+    return {
+        "torso1": lin(k1, OBS_DIM, h, 1.0),
+        "torso2": lin(k2, h, h, 1.0),
+        "pi": lin(k3, h, N_ACTIONS, 0.01),
+        "v": lin(k4, h, 1, 1.0),
+    }
+
+
+def _apply(p, x):
+    h = jnp.tanh(x @ p["torso1"]["w"] + p["torso1"]["b"])
+    h = jnp.tanh(h @ p["torso2"]["w"] + p["torso2"]["b"])
+    logits = h @ p["pi"]["w"] + p["pi"]["b"]
+    value = (h @ p["v"]["w"] + p["v"]["b"])[..., 0]
+    return logits, value
+
+
+@jax.jit
+def policy_logits_value(params, obs):
+    return _apply(params, obs)
+
+
+def policy_action(params, obs: np.ndarray, key) -> Tuple[int, float, float]:
+    logits, value = policy_logits_value(params, jnp.asarray(obs))
+    a = jax.random.categorical(key, logits)
+    logp = jax.nn.log_softmax(logits)[a]
+    return int(a), float(logp), float(value)
+
+
+# ---------------------------------------------------------------------------
+# GAE.
+# ---------------------------------------------------------------------------
+def compute_gae(rewards, values, dones, last_value, gamma, lam):
+    """Numpy GAE over one rollout."""
+    T = len(rewards)
+    adv = np.zeros(T, dtype=np.float32)
+    lastgaelam = 0.0
+    for t in reversed(range(T)):
+        nonterminal = 1.0 - float(dones[t])
+        next_v = last_value if t == T - 1 else values[t + 1]
+        delta = rewards[t] + gamma * next_v * nonterminal - values[t]
+        lastgaelam = delta + gamma * lam * nonterminal * lastgaelam
+        adv[t] = lastgaelam
+    returns = adv + values
+    return adv, returns
+
+
+# ---------------------------------------------------------------------------
+# Update.
+# ---------------------------------------------------------------------------
+def _loss(params, batch, clip_eps, entropy_coef, value_coef):
+    logits, values = _apply(params, batch["obs"])
+    logp_all = jax.nn.log_softmax(logits)
+    logp = jnp.take_along_axis(logp_all, batch["actions"][:, None], axis=1)[:, 0]
+    ratio = jnp.exp(logp - batch["logp_old"])
+    adv = batch["adv"]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv
+    pi_loss = -jnp.mean(jnp.minimum(unclipped, clipped))
+    v_loss = jnp.mean((values - batch["returns"]) ** 2)
+    entropy = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+    total = pi_loss + value_coef * v_loss - entropy_coef * entropy
+    return total, {"pi_loss": pi_loss, "v_loss": v_loss, "entropy": entropy}
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ppo_update(params, opt_state, batch, cfg: PPOConfig):
+    (loss, aux), grads = jax.value_and_grad(
+        _loss, has_aux=True
+    )(params, batch, cfg.clip_eps, cfg.entropy_coef, cfg.value_coef)
+    # global-norm clip + Adam
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g**2) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, cfg.max_grad_norm / (gnorm + 1e-8))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step, m, v = opt_state
+    step = step + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree.map(lambda m_: m_ / (1 - b1**step), m)
+    vhat = jax.tree.map(lambda v_: v_ / (1 - b2**step), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - cfg.lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, (step, m, v), loss, aux
+
+
+@dataclass
+class PPOState:
+    params: dict                 # best-seen policy (by rollout reward)
+    final_params: dict           # last-iteration policy
+    opt_state: tuple
+    history: List[dict]
+    best_reward: float = float("-inf")
+
+
+def train_ppo(env: ServingEnv, cfg: PPOConfig = PPOConfig(), *, verbose: bool = False) -> PPOState:
+    key = jax.random.key(cfg.seed)
+    key, knet = jax.random.split(key)
+    params = init_net(knet, cfg)
+    opt_state = (jnp.zeros((), jnp.int32),
+                 jax.tree.map(jnp.zeros_like, params),
+                 jax.tree.map(jnp.zeros_like, params))
+
+    obs = env.reset()
+    history: List[dict] = []
+    ep_reward, ep_rewards = 0.0, []
+    best_reward, best_params = float("-inf"), params
+
+    for it in range(cfg.iterations):
+        T = cfg.rollout_len
+        obs_buf = np.zeros((T, OBS_DIM), np.float32)
+        act_buf = np.zeros((T,), np.int32)
+        logp_buf = np.zeros((T,), np.float32)
+        val_buf = np.zeros((T,), np.float32)
+        rew_buf = np.zeros((T,), np.float32)
+        done_buf = np.zeros((T,), np.float32)
+
+        for t in range(T):
+            key, kact = jax.random.split(key)
+            a, logp, v = policy_action(params, obs, kact)
+            obs_buf[t], act_buf[t], logp_buf[t], val_buf[t] = obs, a, logp, v
+            obs, r, done, _ = env.step(a)
+            rew_buf[t], done_buf[t] = r, float(done)
+            ep_reward += r
+            if done:
+                ep_rewards.append(ep_reward)
+                ep_reward = 0.0
+                obs = env.reset()
+
+        _, last_v = policy_logits_value(params, jnp.asarray(obs))
+        adv, rets = compute_gae(
+            rew_buf, val_buf, done_buf, float(last_v), cfg.gamma, cfg.gae_lambda
+        )
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+
+        idx = np.arange(T)
+        rng = np.random.default_rng(cfg.seed + it)
+        for _ in range(cfg.epochs):
+            rng.shuffle(idx)
+            for mb in np.array_split(idx, cfg.minibatches):
+                batch = {
+                    "obs": jnp.asarray(obs_buf[mb]),
+                    "actions": jnp.asarray(act_buf[mb]),
+                    "logp_old": jnp.asarray(logp_buf[mb]),
+                    "adv": jnp.asarray(adv[mb]),
+                    "returns": jnp.asarray(rets[mb]),
+                }
+                params, opt_state, loss, aux = ppo_update(
+                    params, opt_state, batch, cfg
+                )
+
+        roll_r = float(rew_buf.sum())
+        if roll_r > best_reward:
+            # PPO can catastrophically forget a good procurement policy on a
+            # later unlucky rollout; keep the best-seen snapshot.
+            best_reward = roll_r
+            best_params = jax.tree.map(lambda x: x, params)
+
+        mean_ep = float(np.mean(ep_rewards[-5:])) if ep_rewards else float("nan")
+        history.append(
+            {
+                "iter": it,
+                "rollout_reward": float(rew_buf.sum()),
+                "mean_episode_reward": mean_ep,
+                "loss": float(loss),
+                "entropy": float(aux["entropy"]),
+            }
+        )
+        if verbose and it % 5 == 0:
+            print(
+                f"[ppo] it={it:3d} rollout_r={history[-1]['rollout_reward']:9.4f} "
+                f"ep_r={mean_ep:9.3f} H={history[-1]['entropy']:.3f}",
+                flush=True,
+            )
+    return PPOState(
+        params=best_params,
+        final_params=params,
+        opt_state=opt_state,
+        history=history,
+        best_reward=best_reward,
+    )
+
+
+def evaluate_policy(env: ServingEnv, params, *, greedy: bool = False, seed: int = 1):
+    """Run one full episode; return the SimResult.
+
+    Stochastic evaluation (the default) is the trained object: the policy
+    hedges between procurement modes tick-by-tick, and argmax-collapsing
+    it discards the offload behaviour it actually learned."""
+    key = jax.random.key(seed)
+    obs = env.reset()
+    done = False
+    while not done:
+        logits, _ = policy_logits_value(params, jnp.asarray(obs))
+        if greedy:
+            a = int(jnp.argmax(logits))
+        else:
+            key, k = jax.random.split(key)
+            a = int(jax.random.categorical(k, logits))
+        obs, _, done, _ = env.step(a)
+    return env.episode_result()

@@ -1,0 +1,184 @@
+"""Resource-procurement policies (paper §II-C, §II-D, §IV).
+
+All five schemes share one interface: ``policy(tick, obs) -> {arch: Action}``.
+
+  reactive    — scale to the smoothed current demand; no burst.  The
+                paper's normalization baseline.
+  util_aware  — spawn when utilization crosses 80% (prior work [14]-[16]);
+                equivalently holds capacity at demand/0.8.
+  exascale    — provision ABOVE a windowed peak prediction (Tributary-style
+                [17]): headroom x recent peak.
+  mixed       — reactive VM fleet + blind burst offload of ANY query about
+                to miss its SLO (MArk [12] / Spock [13]).
+  paragon     — this paper's scheme: latency-class-aware offload (strict
+                queries only; relaxed ones ride out the spike in queue) on
+                top of reactive scaling, consulting the load monitor.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.core.simulator import Action, ArchObs
+
+
+def _scale_target(o: ArchObs, demand: float, headroom: float = 1.0) -> int:
+    return max(1, math.ceil(demand * headroom / o.throughput))
+
+
+@dataclass
+class ReactivePolicy:
+    """Track smoothed demand 1:1 — cheap, but spikes hit the provisioning
+    latency window and violate SLOs."""
+
+    def __call__(self, tick: int, obs: Dict[str, ArchObs]) -> Dict[str, Action]:
+        return {
+            a: Action(target=_scale_target(o, o.ewma_rate)) for a, o in obs.items()
+        }
+
+
+@dataclass
+class UtilAwarePolicy:
+    """Spawn when utilization reaches ``util_target`` (80% in most prior
+    work [14]); release only when it falls below ``scale_down_util``.
+    The hysteresis is the over-provisioning the paper measures in Fig 5:
+    utilization is a lagging, spike-inflated indicator, so VMs spawned for
+    a burst linger long after it drains."""
+
+    util_target: float = 0.8
+    scale_down_util: float = 0.4
+    up_cooldown_s: int = 30        # scale up eagerly on sustained pressure
+    down_cooldown_s: int = 120     # release conservatively (the paper's point:
+                                   # spike-spawned VMs linger -> over-provision)
+    _targets: Dict[str, int] = field(default_factory=dict)
+    _last_up: Dict[str, int] = field(default_factory=dict)
+    _last_down: Dict[str, int] = field(default_factory=dict)
+
+    def __call__(self, tick: int, obs: Dict[str, ArchObs]) -> Dict[str, Action]:
+        out = {}
+        for a, o in obs.items():
+            cur = self._targets.get(a, max(o.n_active + o.n_pending, 1))
+            if (
+                o.utilization > self.util_target
+                and tick - self._last_up.get(a, -10**9) >= self.up_cooldown_s
+            ):
+                # spawn enough to bring utilization back under target
+                cur = max(
+                    cur + 1, _scale_target(o, o.ewma_rate, 1.0 / self.util_target)
+                )
+                self._last_up[a] = tick
+            elif (
+                o.utilization < self.scale_down_util
+                and cur > 1
+                and tick - self._last_down.get(a, -10**9) >= self.down_cooldown_s
+            ):
+                cur -= 1
+                self._last_down[a] = tick
+            self._targets[a] = cur
+            out[a] = Action(target=cur)
+        return out
+
+
+@dataclass
+class ExascalePolicy:
+    """Provision for the windowed peak plus headroom ("spawn additional VMs
+    than predicted demand")."""
+
+    headroom: float = 1.15
+
+    def __call__(self, tick: int, obs: Dict[str, ArchObs]) -> Dict[str, Action]:
+        return {
+            a: Action(
+                target=_scale_target(
+                    o, max(o.window_peak, o.ewma_rate), self.headroom
+                )
+            )
+            for a, o in obs.items()
+        }
+
+
+@dataclass
+class MixedPolicy:
+    """Reactive fleet + blind offload: every query about to miss its SLO is
+    handed to a burst instance, regardless of its latency class."""
+
+    def __call__(self, tick: int, obs: Dict[str, ArchObs]) -> Dict[str, Action]:
+        return {
+            a: Action(target=_scale_target(o, o.ewma_rate), offload="blind")
+            for a, o in obs.items()
+        }
+
+
+@dataclass
+class ParagonPolicy:
+    """The paper's scheme (§IV): constraint-aware procurement.
+
+    * strict-latency queries offload to burst when the VM queue would
+      violate them;
+    * relaxed-latency queries NEVER pay the burst premium — their slack
+      absorbs the spike while reactive scaling catches up;
+    * when the load-monitor window says the trace is flat
+      (peak/median < ``bursty_threshold``, Observation 4), provisioning
+      gets a small cushion instead, because burst would not pay off.
+    """
+
+    bursty_threshold: float = 1.5
+    flat_cushion: float = 1.1
+    drain_horizon_s: float = 5.0   # drain relaxed backlog within its slack
+
+    def __call__(self, tick: int, obs: Dict[str, ArchObs]) -> Dict[str, Action]:
+        out = {}
+        for a, o in obs.items():
+            bursty = o.peak_to_median >= self.bursty_threshold
+            headroom = 1.0 if bursty else self.flat_cushion
+            # right-size for demand PLUS queued (relaxed) work: the backlog
+            # must drain within the relaxed slack, on VMs, not on burst
+            demand = o.ewma_rate + o.queue_len / self.drain_horizon_s
+            out[a] = Action(
+                target=_scale_target(o, demand, headroom),
+                offload="slack_aware",
+            )
+        return out
+
+
+SCHEDULERS = {
+    "reactive": ReactivePolicy,
+    "util_aware": UtilAwarePolicy,
+    "exascale": ExascalePolicy,
+    "mixed": MixedPolicy,
+    "paragon": ParagonPolicy,
+}
+
+
+def get_scheduler(name: str, **kw):
+    return SCHEDULERS[name](**kw)
+
+
+@dataclass
+class SpotParagonPolicy(ParagonPolicy):
+    """Beyond-paper (§VI "Limitations"): Paragon + a SPOT tier.
+
+    The steady base load runs on preemptible spot slices at
+    ``spot_discount`` x the on-demand price; an on-demand floor sized for
+    the strict-class share guarantees SLO-critical capacity through
+    preemptions, and the class-aware burst offload (inherited) covers the
+    transient dips a reclaim leaves behind.
+    """
+
+    strict_share: float = 0.25     # workload's strict fraction (floor sizing)
+    spot_buffer: float = 1.25      # spot over-provision vs residual demand
+                                   # (preemption churn absorber)
+
+    def __call__(self, tick: int, obs: Dict[str, ArchObs]) -> Dict[str, Action]:
+        out = {}
+        for a, o in obs.items():
+            demand = o.ewma_rate + o.queue_len / self.drain_horizon_s
+            floor = max(1, math.ceil(demand * self.strict_share / o.throughput))
+            residual = max(0.0, demand - floor * o.throughput)
+            spot = math.ceil(residual * self.spot_buffer / o.throughput)
+            out[a] = Action(target=floor, spot_target=spot, offload="slack_aware")
+        return out
+
+
+SCHEDULERS["spot_paragon"] = SpotParagonPolicy

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    axis_rules,
+    current_rules,
+    logical_to_spec,
+    shard,
+    spec_for_axes,
+)

@@ -1,0 +1,92 @@
+"""Logical-axis sharding.
+
+Model code names tensor dimensions with *logical* axes ("batch", "heads",
+"ff", ...).  A mesh-specific :class:`AxisRules` maps logical axes to mesh
+axes; ``shard(x, *axes)`` applies ``with_sharding_constraint`` only when
+rules are active, so the exact same model code runs on 1 CPU device (tests)
+and on the 512-chip production mesh (dry-run) unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+@dataclass
+class AxisRules:
+    mesh: Mesh
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Optional[AxisRules] = None) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec under ``rules``.
+
+    Mesh axes already consumed by an earlier dimension are dropped (a mesh
+    axis may shard at most one dimension of a tensor).
+    """
+    rules = rules or current_rules()
+    if rules is None:
+        return P()
+    used = set()
+    parts = []
+    for ax in axes:
+        m = rules.mesh_axes(ax)
+        if m is None:
+            parts.append(None)
+            continue
+        m_tuple = (m,) if isinstance(m, str) else tuple(m)
+        m_tuple = tuple(a for a in m_tuple if a not in used and a in rules.mesh.axis_names)
+        if not m_tuple:
+            parts.append(None)
+            continue
+        used.update(m_tuple)
+        parts.append(m_tuple[0] if len(m_tuple) == 1 else m_tuple)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def spec_for_axes(axes: Sequence[Optional[str]], rules: Optional[AxisRules] = None):
+    """NamedSharding for a logical-axes tuple (for in_shardings)."""
+    rules = rules or current_rules()
+    if rules is None:
+        return None
+    return NamedSharding(rules.mesh, logical_to_spec(axes, rules))
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes (no-op without rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert x.ndim == len(axes), (x.shape, axes)
+    spec = logical_to_spec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,116 @@
+"""Flash-decode kernel (Pallas, TPU target).
+
+The decode hot loop: ONE query token per sequence attending to a long KV
+cache.  Grid = (batch, q_heads, S/BK) with the KV axis innermost
+(sequential), so the running softmax statistics live in VMEM scratch and
+the cache streams HBM->VMEM in (BK, hd) tiles — this kernel is pure
+memory traffic, which is exactly what the ``decode_32k`` / ``long_500k``
+roofline says dominates.
+
+Invalid cache slots (ring-buffer holes, beyond-horizon positions) are
+masked via the ``valid`` (B, S) boolean the engine derives from
+``slot_pos``.  Validated with ``interpret=True`` against
+``ref.decode_attention_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, valid_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *,
+    scale: float,
+):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)            # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)         # (BK, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)         # (BK, hd)
+    valid = valid_ref[0, :]                           # (BK,) bool
+
+    s = jnp.einsum("h,kh->k", q, k) * scale           # (BK,)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)     # (BK,)
+
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum("k,kh->h", p, v)[None]
+    m_ref[0] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[0]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0, :] = (acc_ref[0] / safe).astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,                    # (B, nq, hd) — one token per sequence
+    k_cache: jax.Array,              # (B, S, nkv, hd)
+    v_cache: jax.Array,              # (B, S, nkv, hd)
+    valid: jax.Array,                # (B, S) bool
+    *,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, nq, hd = q.shape
+    s, nkv = k_cache.shape[1], k_cache.shape[2]
+    assert nq % nkv == 0
+    group = nq // nkv
+    scale = hd ** -0.5
+
+    bk = min(block_k, _ceil_to(s, 8))
+    s_p = _ceil_to(s, bk)
+    if s_p != s:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_p - s), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, s_p - s)))
+
+    grid = (b, nq, s_p // bk)
+
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b_, h, ik: (b_, h, 0)),
+            pl.BlockSpec(
+                (1, bk, 1, hd), lambda b_, h, ik, g=group: (b_, ik, h // g, 0)
+            ),
+            pl.BlockSpec(
+                (1, bk, 1, hd), lambda b_, h, ik, g=group: (b_, ik, h // g, 0)
+            ),
+            pl.BlockSpec((1, bk), lambda b_, h, ik: (b_, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b_, h, ik: (b_, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, valid)

@@ -1,0 +1,205 @@
+"""Pure-jnp oracles.
+
+These functions are simultaneously (1) the XLA execution path used by the
+models on CPU and in the dry-run, and (2) the reference oracles that every
+Pallas kernel is validated against (``tests/test_kernels.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group_heads(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B, S, nq, hd) -> (B, S, nkv, group, hd)."""
+    b, s, nq, hd = q.shape
+    assert nq % num_kv == 0, (nq, num_kv)
+    return q.reshape(b, s, num_kv, nq // num_kv, hd)
+
+
+def mha_reference(
+    q: jax.Array,                    # (B, Sq, nq, hd)
+    k: jax.Array,                    # (B, Sk, nkv, hd)
+    v: jax.Array,                    # (B, Sk, nkv, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,                 # 0 = unlimited; else sliding window
+    q_offset: int = 0,               # absolute position of q[0] relative to k[0]
+    bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Quadratic attention with fp32 softmax. Returns (B, Sq, nq, hd)."""
+    b, sq, nq, hd = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    qg = _group_heads(q, nkv)                          # (B,Sq,nkv,g,hd)
+    scale = hd ** -0.5
+    # f32 ACCUMULATION without materializing f32 copies of K/V — converting
+    # a 32k-token cache to f32 per layer dominated decode memory traffic
+    # (EXPERIMENTS.md §Perf, llama3-8b decode_32k iteration 2)
+    logits = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, k, preferred_element_type=jnp.float32
+    ) * scale                                          # (B,nkv,g,Sq,Sk)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, sq, nq, hd).astype(q.dtype)
+
+
+def decode_attention_reference(
+    q: jax.Array,                    # (B, nq, hd) — a single new token per seq
+    k_cache: jax.Array,              # (B, S, nkv, hd)
+    v_cache: jax.Array,              # (B, S, nkv, hd)
+    valid: jax.Array,                # (B, S) bool — which cache slots attend
+) -> jax.Array:
+    """Single-token flash-decode oracle. Returns (B, nq, hd)."""
+    b, nq, hd = q.shape
+    nkv = k_cache.shape[2]
+    qg = q.reshape(b, nkv, nq // nkv, hd)
+    scale = hd ** -0.5
+    # f32 accumulation, bf16 cache reads (no materialized f32 cache copy)
+    logits = jnp.einsum(
+        "bkgh,bskh->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskh->bkgh", probs.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, nq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch") chunkwise linear-attention recurrence.
+#
+# Per head with state S in R^{hd x hd}:
+#   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+#   o_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t        (bonus term u on current)
+# w_t in (0,1) is the data-dependent decay.
+# ---------------------------------------------------------------------------
+def rwkv6_reference(
+    r: jax.Array,                    # (B, T, H, hd)
+    k: jax.Array,                    # (B, T, H, hd)
+    v: jax.Array,                    # (B, T, H, hd)
+    w: jax.Array,                    # (B, T, H, hd) decay in (0,1)
+    u: jax.Array,                    # (H, hd) per-head bonus
+    state: Optional[jax.Array] = None,  # (B, H, hd, hd)
+):
+    """Sequential oracle. Returns (out (B,T,H,hd), final_state)."""
+    b, t, h, d = r.shape
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((b, h, d, d), dtype=f32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                     # each (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]   # (B,H,hd,hd)
+        o = jnp.einsum(
+            "bhij,bhi->bhj", S + u[None, :, :, None] * kv, r_t
+        )
+        S = w_t[..., :, None] * S + kv
+        return S, o
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(f32), 1, 0) for a in (r, k, v, w)
+    )
+    state, out = jax.lax.scan(step, state.astype(f32), xs)
+    out = jnp.moveaxis(out, 0, 1)                    # (B,T,H,hd)
+    return out.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) elementwise gated linear recurrence.
+#   h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+# with a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)).
+# ---------------------------------------------------------------------------
+def rglru_reference(
+    x: jax.Array,                    # (B, T, D) gated input
+    a: jax.Array,                    # (B, T, D) decay in (0,1)
+    h0: Optional[jax.Array] = None,  # (B, D)
+):
+    b, t, d = x.shape
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((b, d), dtype=f32)
+
+    def step(h, inp):
+        x_t, a_t = inp
+        h = a_t * h + jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 0.0)) * x_t
+        return h, h
+
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(a.astype(f32), 1, 0))
+    hT, out = jax.lax.scan(step, h0.astype(f32), xs)
+    return jnp.moveaxis(out, 0, 1).astype(x.dtype), hT
+
+
+# ---------------------------------------------------------------------------
+# Blocked sliding-window attention (XLA path).
+#
+# ``mha_reference`` with a window only MASKS the (Sq, Sk) logits — the
+# quadratic compute/traffic remains (EXPERIMENTS.md §Perf, whisper
+# prefill_32k iteration 1, refuted).  This computes the same function
+# block-locally: queries in block i attend keys in blocks {i-1, i}, exact
+# for window <= block size.  O(S * 2W) logits instead of O(S^2).
+# ---------------------------------------------------------------------------
+def local_attention_blocked(
+    q: jax.Array,                    # (B, S, nq, hd)
+    k: jax.Array,                    # (B, S, nkv, hd)
+    v: jax.Array,                    # (B, S, nkv, hd)
+    *,
+    window: int,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, s, nq, hd = q.shape
+    nkv = k.shape[2]
+    assert window > 0
+    assert q_offset == 0, "blocked path assumes q/k aligned at position 0"
+    blk = window
+    s_p = -(-s // blk) * blk
+    if s_p != s:
+        pad = ((0, 0), (0, s_p - s), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    nb = s_p // blk
+
+    qb = q.reshape(b, nb, blk, nq, hd)
+    kb = k.reshape(b, nb, blk, nkv, hd)
+    vb = v.reshape(b, nb, blk, nkv, hd)
+    # keys for block i: [block i-1 ; block i]   (first block: zeros, masked)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)         # (B, nb, 2W, nkv, hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+
+    qg = qb.reshape(b, nb, blk, nkv, nq // nkv, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum(
+        "bnqkgh,bnskh->bnkgqs", qg, k2, preferred_element_type=jnp.float32
+    ) * scale                                          # (B,nb,nkv,g,W,2W)
+
+    ib = jnp.arange(nb)[:, None, None]
+    qpos = q_offset + ib * blk + jnp.arange(blk)[None, :, None]   # (nb, W, 1)
+    kpos = (ib - 1) * blk + jnp.arange(2 * blk)[None, None, :]    # (nb, 1, 2W)
+    mask = (kpos >= 0) & (kpos <= qpos) & (kpos > qpos - window)
+    logits = jnp.where(mask[None, :, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bnkgqs,bnskh->bnqkgh", probs.astype(v2.dtype), v2,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(b, s_p, nq, hd)
+    return out[:, :s].astype(q.dtype)

@@ -1,0 +1,138 @@
+"""RWKV-6 chunkwise recurrence kernel (Pallas, TPU target).
+
+The sequential oracle is O(T) steps of rank-1 state updates — hopeless on
+a systolic machine.  This kernel processes the sequence in chunks of C
+tokens per grid step with the (hd, hd) state carried in VMEM scratch:
+
+  within a chunk (log-space cumulative decay  la_t = sum_{s<=t} log w_s):
+    o_t  = (r_t * exp(la_{t-1})) . S0            (carry-in state term)
+         + sum_{s<t} [ sum_i r_ti k_si e^{la_{t-1,i}-la_{s,i}} ] v_s
+         + ((r_t * u) . k_t) v_t                 (bonus diagonal)
+    S_C  = diag(e^{la_C}) S0 + sum_s (k_s * e^{la_C - la_s}) v_s^T
+
+The intra-chunk pair term keeps the decay ratio INSIDE the reduction over
+the head dim (a (C, C, hd) broadcast) rather than factorizing it into
+k / a_s — the factorized form overflows when the data-dependent decay is
+strong (exp(+la) with la ~ -50/token), the broadcast form is always
+bounded by 1.  That trades MXU matmuls for VPU work on a (C, C, hd) tile;
+with C = 32, hd = 64 the tile is 256 KB in VMEM — the TPU-native sweet
+spot for this recurrence (DESIGN.md 'hardware adaptation').
+
+Validated with ``interpret=True`` against ``ref.rwkv6_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(
+    r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+    o_ref, sT_ref,
+    state_ref,
+    *,
+    chunk: int,
+):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)         # (C, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)               # (hd,)
+    S = state_ref[...]                                # (hd, hd) f32
+
+    logw = jnp.log(jnp.maximum(w, 1e-38))             # (C, hd) <= 0
+    la = jnp.cumsum(logw, axis=0)                     # la_t = sum_{s<=t}
+    la_prev = la - logw                               # la_{t-1} (la_0 = 0)
+
+    # carry-in state term: (r_t * e^{la_{t-1}}) @ S
+    r_dec = r * jnp.exp(la_prev)                      # (C, hd)
+    o_state = jax.lax.dot_general(
+        r_dec, S, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                 # (C, hd_v)
+
+    # intra-chunk pair scores: A[t, s] = sum_i r_ti k_si e^{la_{t-1,i}-la_{s,i}}
+    ratio = jnp.exp(la_prev[:, None, :] - la[None, :, :])   # (C, C, hd) <= 1 for s<t
+    A = jnp.sum(r[:, None, :] * k[None, :, :] * ratio, axis=-1)  # (C, C)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(s_idx < t_idx, A, 0.0)              # strictly lower
+    o_intra = jax.lax.dot_general(
+        A, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # bonus diagonal: ((r_t * u) . k_t) v_t
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1)      # (C,)
+    o = o_state + o_intra + bonus[:, None] * v
+    o_ref[0, :, 0, :] = o.astype(o_ref.dtype)
+
+    # state update: S_C = diag(e^{la_C}) S + sum_s (k_s e^{la_C - la_s}) v_s^T
+    la_C = la[-1]                                     # (hd,)
+    k_dec = k * jnp.exp(la_C[None, :] - la)           # (C, hd), bounded
+    S_new = jnp.exp(la_C)[:, None] * S + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    state_ref[...] = S_new
+
+    @pl.when(ic == nc - 1)
+    def _finalize():
+        sT_ref[0, 0] = S_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_chunked(
+    r: jax.Array,                    # (B, T, H, hd)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,                    # decay in (0, 1)
+    u: jax.Array,                    # (H, hd)
+    state=None,                      # (B, H, hd, hd) f32
+    *,
+    chunk: int = 32,
+    interpret: bool = False,
+):
+    """Returns (out (B,T,H,hd), final_state (B,H,hd,hd) f32)."""
+    b, t, h, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    c = min(chunk, t)
+    t_p = -(-t // c) * c
+    if t_p != t:
+        pad = ((0, 0), (0, t_p - t), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        w = jnp.pad(w, pad, constant_values=1.0)   # decay 1 = no-op steps
+
+    grid = (b, h, t_p // c)
+    seq_spec = pl.BlockSpec((1, c, 1, hd), lambda b_, h_, ic: (b_, ic, h_, 0))
+
+    out, s_final = pl.pallas_call(
+        functools.partial(_rwkv_kernel, chunk=c),
+        grid=grid,
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, hd), lambda b_, h_, ic: (h_, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, hd, hd), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t_p, h, hd), r.dtype),
+            jax.ShapeDtypeStruct((b, h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return out[:, :t], s_final

@@ -1,0 +1,340 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# NOTE on cost accounting: XLA's cost model counts a while-loop (lax.scan)
+# body ONCE — it does not multiply by the trip count — so a naive
+# cost_analysis() of the scanned layer stack under-reports FLOPs/bytes/
+# collectives by ~num_layers x.  run_one() therefore compiles THREE
+# programs per combo:
+#   1. the FULL config with lax.scan  -> lowering proof + memory_analysis
+#   2. two UNROLLED probes at K=2 and K=4 pattern-repeats -> per-layer
+#      costs by affine extrapolation (exact: layer costs are affine in
+#      the repeat count; embed/unembed/optimizer are the intercept).
+# See model._scan / REPRO_UNROLL_SCANS.
+
+# ruff: noqa: E402  — the two lines above MUST precede any jax import.
+"""Multi-pod dry-run.
+
+For every (architecture x input-shape x mesh) combination:
+  lower the step (train_step / prefill / serve_step) with production
+  shardings, compile it, and record memory_analysis / cost_analysis /
+  per-collective byte counts into a JSON artifact that §Roofline and the
+  benchmarks read.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --arch llama3-8b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --all            # every combo, both meshes
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config, list_architectures
+from repro.distributed.sharding import axis_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _type_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by every collective, from optimized HLO.
+
+    Optimized HLO does not annotate operand types inline, so we read the
+    RESULT type (left of ``= <type> <opcode>(``) and convert it to moved
+    bytes with the standard ring-algorithm factors:
+
+      all-gather          ~ result * (S-1)/S          (result is gathered)
+      all-reduce          ~ 2 * result * (S-1)/S      (RS + AG phases)
+      reduce-scatter      ~ result * (S-1)            (input is S x result)
+      all-to-all          ~ result * (S-1)/S
+      collective-permute  ~ result
+
+    S (shard-group size) parsed from ``replica_groups=[G,S]``; S=1 when a
+    collective has no cross-device group (cost 0).
+    """
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq == -1:
+            continue
+        rhs = s[eq + 3:]
+        for c in _COLLECTIVES:
+            idx = rhs.find(f" {c}(")
+            if idx == -1:
+                continue
+            if f"{c}-start" in rhs:
+                continue  # async start; its -done carries the final type
+            result_seg = rhs[:idx]
+            nbytes = sum(_type_bytes(m) for m in _SHAPE_RE.finditer(result_seg))
+            m = _GROUPS_RE.search(rhs)
+            group = int(m.group(2)) if m else 1
+            if group <= 1:
+                factor = 0.0
+            elif c == "all-reduce":
+                factor = 2.0 * (group - 1) / group
+            elif c == "reduce-scatter":
+                factor = float(group - 1)
+            elif c == "collective-permute":
+                factor = 1.0
+            else:  # all-gather, all-to-all
+                factor = (group - 1) / group
+            out[c] += int(nbytes * factor)
+            out["count"] += 1
+            break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _probe_cfg(cfg, n_rep: int):
+    """Same family, ``n_rep`` pattern repeats (+ original tail blocks)."""
+    import dataclasses as _dc
+
+    kw = dict(num_layers=n_rep * len(cfg.block_pattern) + len(cfg.tail_blocks))
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = n_rep
+    return _dc.replace(cfg, **kw)
+
+
+def _compile_metrics(cfg, shape, mesh, *, unroll: bool,
+                     moe_path=None, donate: bool = False,
+                     window_override=None, remat=True):
+    """Lower+compile one step; return (compiled-metrics dict, rules)."""
+    prev = os.environ.get("REPRO_UNROLL_SCANS")
+    os.environ["REPRO_UNROLL_SCANS"] = "1" if unroll else "0"
+    try:
+        t0 = time.perf_counter()
+        step, args, in_shardings, rules, dn = build_step(
+            cfg, shape, mesh, moe_path=moe_path,
+            window_override=window_override, remat=remat,
+        )
+        with mesh, axis_rules(rules):
+            jitted = jax.jit(
+                step, in_shardings=in_shardings,
+                donate_argnums=dn if donate else (),
+            )
+            lowered = jitted.lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_UNROLL_SCANS", None)
+        else:
+            os.environ["REPRO_UNROLL_SCANS"] = prev
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return {
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            k: int(getattr(mem, k, 0) or 0)
+            for k in (
+                "temp_size_in_bytes",
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+        },
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collectives": coll,
+        "hlo_ops": len(hlo.splitlines()),
+    }, rules
+
+
+_PROBE_REPS = (2, 4)
+
+
+def _extrapolate(m_lo: dict, m_hi: dict, n_lo: int, n_hi: int, n_full: int) -> dict:
+    """Affine per-repeat extrapolation of every cost metric."""
+    def ext(a, b):
+        slope = (b - a) / (n_hi - n_lo)
+        return max(b + slope * (n_full - n_hi), 0.0)
+
+    coll = {
+        k: int(ext(m_lo["collectives"][k], m_hi["collectives"][k]))
+        for k in m_lo["collectives"]
+    }
+    coll["total"] = sum(coll[c] for c in _COLLECTIVES)
+    return {
+        "flops": ext(m_lo["flops"], m_hi["flops"]),
+        "bytes_accessed": ext(m_lo["bytes_accessed"], m_hi["bytes_accessed"]),
+        "collectives": coll,
+    }
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+            probes: bool = True, variant: str = "", moe_path=None,
+            donate: bool = False, window_override=None,
+            remat=True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if variant:
+        tag += f"__{variant}"
+    opts = dict(moe_path=moe_path, donate=donate,
+                window_override=window_override, remat=remat)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "n_devices": mesh.devices.size, "ok": False,
+        "variant": variant or "baseline", **{k: str(v) for k, v in opts.items()},
+    }
+    try:
+        # 1. full config, lax.scan: the lowering proof + memory analysis
+        full, rules = _compile_metrics(cfg, shape, mesh, unroll=False, **opts)
+        rec.update(
+            ok=True,
+            lower_s=full["lower_s"],
+            compile_s=full["compile_s"],
+            rules={k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in rules.rules.items()},
+            memory=full["memory"],
+            flops_scan_body=full["flops"],
+            params_total=cfg.params_total,
+            params_active=cfg.params_active,
+            hlo_ops=full["hlo_ops"],
+        )
+
+        # 2. unrolled probes -> true per-layer costs by extrapolation
+        if probes:
+            n_lo, n_hi = _PROBE_REPS
+            m_lo, _ = _compile_metrics(_probe_cfg(cfg, n_lo), shape, mesh,
+                                       unroll=True, **opts)
+            m_hi, _ = _compile_metrics(_probe_cfg(cfg, n_hi), shape, mesh,
+                                       unroll=True, **opts)
+            n_full = (cfg.num_layers - len(cfg.tail_blocks)) // len(cfg.block_pattern)
+            est = _extrapolate(m_lo, m_hi, n_lo, n_hi, n_full)
+            rec.update(
+                flops=est["flops"],
+                bytes_accessed=est["bytes_accessed"],
+                collectives=est["collectives"],
+                probe_reps=[n_lo, n_hi, n_full],
+                probe_flops=[m_lo["flops"], m_hi["flops"]],
+            )
+        else:
+            rec.update(flops=full["flops"], bytes_accessed=full["bytes_accessed"],
+                       collectives=full["collectives"])
+
+        print(f"[dryrun] OK  {tag}  flops={rec['flops']:.3e} "
+              f"coll={rec['collectives']['total']:.3e}B "
+              f"compile={rec['compile_s']:.1f}s", flush=True)
+    except Exception as e:  # noqa: BLE001 — record the failure, don't crash --all
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] FAIL {tag}: {rec['error'][:200]}", flush=True)
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--all-shapes", action="store_true",
+                    help="every (shape x mesh) for --arch")
+    # §Perf hillclimb knobs — write <tag>__<variant>.json artifacts
+    ap.add_argument("--variant", default="",
+                    help="artifact suffix for an optimized configuration")
+    ap.add_argument("--moe-path", default=None, choices=("local", "ep_a2a"))
+    ap.add_argument("--donate", action="store_true",
+                    help="donate state buffers (cache / params+opt)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="override the attention window for this lowering")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing (train steps)")
+    ap.add_argument("--remat-policy", default=None, choices=("full", "dots"),
+                    help="checkpoint policy for train steps")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    if args.all:
+        failures = 0
+        for arch in list_architectures():
+            for shape in INPUT_SHAPES:
+                for mp in (False, True):
+                    # cost probes feed the single-pod roofline table; the
+                    # multi-pod pass proves the "pod" axis lowers
+                    rec = run_one(arch, shape, multi_pod=mp,
+                                  out_dir=args.out, probes=not mp)
+                    failures += 0 if rec["ok"] else 1
+        raise SystemExit(1 if failures else 0)
+
+    if args.all_shapes:
+        assert args.arch
+        failures = 0
+        for shape in INPUT_SHAPES:
+            for mp in (False, True):
+                rec = run_one(args.arch, shape, multi_pod=mp,
+                              out_dir=args.out, probes=not mp)
+                failures += 0 if rec["ok"] else 1
+        raise SystemExit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch and --shape (or --all) required"
+    rec = run_one(
+        args.arch, args.shape, multi_pod=args.multi_pod, out_dir=args.out,
+        variant=args.variant, moe_path=args.moe_path, donate=args.donate,
+        window_override=args.window,
+        remat=False if args.no_remat else (args.remat_policy or True),
+    )
+    if rec["ok"]:
+        print(json.dumps({k: rec[k] for k in ("memory", "flops", "collectives")}, indent=1))
+    raise SystemExit(0 if rec["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

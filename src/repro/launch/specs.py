@@ -1,0 +1,239 @@
+"""ShapeDtypeStruct input specs + sharding trees for every
+(architecture x input-shape x mesh) combination.
+
+Everything here is abstract (eval_shape / ShapeDtypeStruct): the 72B and 1T
+parameter sets are never allocated.  The dry-run lowers
+``jax.jit(step, in_shardings=...)`` against these specs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import INPUT_SHAPES, InputShape, ModelConfig
+from repro.distributed.sharding import AxisRules, logical_to_spec
+from repro.launch.mesh import make_rules
+from repro.models import model as model_lib
+from repro.training.optimizer import OptimizerConfig, adamw_init
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sliding window used for global-attn layers at this shape (0 = full)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return cfg.long_context_window
+    return 0
+
+
+def batch_spec(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Training / forward batch as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vision":
+        inputs = sds((b, s, cfg.d_model), dtype)
+    else:
+        inputs = sds((b, s), jnp.int32)
+    out = {"inputs": inputs, "labels": sds((b, s), jnp.int32)}
+    if cfg.is_encoder_decoder:
+        out["enc_inputs"] = sds((b, cfg.encoder_seq, cfg.d_model), dtype)
+    return out
+
+
+def batch_axes(cfg: ModelConfig, batch: Dict[str, Any]) -> Dict[str, Tuple]:
+    axes = {}
+    for k, v in batch.items():
+        if v.ndim == 2:
+            axes[k] = ("batch", "seq_act")
+        else:
+            axes[k] = ("batch", "seq_act", None)
+    return axes
+
+
+def cache_spec(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """Abstract decode/prefill cache for this shape."""
+    window = decode_window(cfg, shape)
+    b = shape.global_batch
+
+    def build():
+        cache = model_lib.init_cache(
+            cfg, b, shape.seq_len, window=window, dtype=dtype
+        )
+        if cfg.is_encoder_decoder:
+            # cross-attn KV: (L, B, enc_seq, nkv, hd)
+            hd = cfg.resolved_head_dim
+            cache["cross"] = {
+                "k": jnp.zeros((cfg.num_layers, b, cfg.encoder_seq, cfg.num_kv_heads, hd), dtype),
+                "v": jnp.zeros((cfg.num_layers, b, cfg.encoder_seq, cfg.num_kv_heads, hd), dtype),
+            }
+        return cache
+
+    return jax.eval_shape(build)
+
+
+_LEAF_AXES = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "slot_pos": ("layers", "batch", "kv_seq"),
+    "wkv": ("layers", "batch", "rwkv_heads", None, None),
+    "shift_tm": ("layers", "batch", None),
+    "shift_cm": ("layers", "batch", None),
+    "conv": ("layers", "batch", None, "ff"),
+    "h": ("layers", "batch", "ff"),
+    "t": ("batch",),
+}
+
+
+def cache_axes(cache_tree) -> Any:
+    """Logical axes tree for a cache (matched by leaf dict key)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in flat:
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1] if keys else None
+        if "cross" in keys:
+            # whisper cross-attn KV: encoder seq (1500) stays unsharded
+            axes = ("layers", "batch", None, "kv_heads", None)
+        else:
+            axes = _LEAF_AXES.get(name)
+        if axes is None:
+            axes = (None,) * leaf.ndim
+        # tail (unstacked) cache entries and per-batch 't' have no layer dim
+        if len(axes) == leaf.ndim + 1 and axes[0] == "layers":
+            axes = axes[1:]
+        assert len(axes) == leaf.ndim, (path, leaf.shape, axes)
+        out.append(tuple(axes))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shardings_of(axes_tree, rules: AxisRules):
+    return jax.tree.map(
+        lambda axes: NamedSharding(rules.mesh, logical_to_spec(axes, rules)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Step builders for the dry-run (and the launchers).
+# ---------------------------------------------------------------------------
+def build_train(cfg: ModelConfig, shape: InputShape, rules: AxisRules,
+                *, moe_path: str = "local", param_dtype=jnp.bfloat16,
+                opt_state_dtype=None, remat=True):
+    """(step_fn, arg_specs, in_shardings) for a full train step."""
+    # 1T-class models get bf16 optimizer states by default (HBM budget)
+    if opt_state_dtype is None:
+        opt_state_dtype = (
+            jnp.bfloat16 if cfg.params_total > 200_000_000_000 else jnp.float32
+        )
+    tcfg = TrainConfig(
+        optimizer=OptimizerConfig(state_dtype=opt_state_dtype),
+        moe_path=moe_path,
+        window=decode_window(cfg, shape),
+        remat=remat,
+    )
+    step = make_train_step(cfg, tcfg)
+
+    params = model_lib.abstract_params(cfg, param_dtype)
+    opt = jax.eval_shape(lambda p: adamw_init(p, tcfg.optimizer), params)
+    batch = batch_spec(cfg, shape, param_dtype)
+
+    p_axes = model_lib.param_axes(cfg, param_dtype)
+    p_shard = shardings_of(p_axes, rules)
+    opt_shard = {
+        "step": NamedSharding(rules.mesh, P()),
+        "m": p_shard,
+        "v": p_shard,
+    }
+    b_shard = shardings_of(batch_axes(cfg, batch), rules)
+    args = (params, opt, batch)
+    in_shardings = (p_shard, opt_shard, b_shard)
+    return step, args, in_shardings
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, rules: AxisRules,
+                  *, moe_path: str = "local", param_dtype=jnp.bfloat16,
+                  window_override: Optional[int] = None):
+    window = decode_window(cfg, shape) if window_override is None else window_override
+
+    def step(params, inputs, cache, enc_inputs=None):
+        return model_lib.prefill(
+            cfg, params, inputs, cache,
+            enc_inputs=enc_inputs, window=window, moe_path=moe_path,
+        )
+
+    params = model_lib.abstract_params(cfg, param_dtype)
+    batch = batch_spec(cfg, shape, param_dtype)
+    cache = cache_spec(cfg, shape, param_dtype)
+
+    p_shard = shardings_of(model_lib.param_axes(cfg, param_dtype), rules)
+    b_ax = batch_axes(cfg, batch)
+    c_shard = shardings_of(cache_axes(cache), rules)
+    i_shard = shardings_of({"inputs": b_ax["inputs"]}, rules)["inputs"]
+    args = [params, batch["inputs"], cache]
+    in_shardings = [p_shard, i_shard, c_shard]
+    if cfg.is_encoder_decoder:
+        args.append(batch["enc_inputs"])
+        in_shardings.append(shardings_of({"e": b_ax["enc_inputs"]}, rules)["e"])
+    return step, tuple(args), tuple(in_shardings)
+
+
+def build_decode(cfg: ModelConfig, shape: InputShape, rules: AxisRules,
+                 *, param_dtype=jnp.bfloat16):
+    window = decode_window(cfg, shape)
+
+    def step(params, tokens, cache):
+        return model_lib.decode_step(cfg, params, tokens, cache, window=window)
+
+    params = model_lib.abstract_params(cfg, param_dtype)
+    cache = cache_spec(cfg, shape, param_dtype)
+    tokens = sds((shape.global_batch,), jnp.int32)
+
+    p_shard = shardings_of(model_lib.param_axes(cfg, param_dtype), rules)
+    c_shard = shardings_of(cache_axes(cache), rules)
+    t_shard = shardings_of({"t": ("batch",)}, rules)["t"]
+    return step, (params, tokens, cache), (p_shard, t_shard, c_shard)
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+               moe_path: Optional[str] = None, param_dtype=jnp.bfloat16,
+               window_override: Optional[int] = None, remat=True):
+    """Dispatch on the shape kind. Returns (step, args, in_shardings, rules,
+    donate) where ``donate`` is the donate_argnums a production launcher
+    uses (state-carrying buffers: cache for serving, params+opt for
+    training)."""
+    mode = {"train": "train", "prefill": "prefill", "decode": "decode"}[shape.kind]
+    cache_len = 0
+    if mode == "decode":
+        w = decode_window(cfg, shape) if window_override is None else window_override
+        cache_len = min(w, shape.seq_len) if w else shape.seq_len
+    rules = make_rules(
+        cfg, mesh, mode, batch_size=shape.global_batch, cache_len=cache_len
+    )
+    if moe_path is None:
+        # ep_a2a (explicit expert-parallel all_to_all) is the optimized
+        # default — it cut kimi-k2's collective term 93x (§Perf target 1)
+        # and falls back to the sort-based path wherever the mesh/shape
+        # doesn't support it (e.g. single-token decode).
+        moe_path = "ep_a2a" if cfg.num_experts else "local"
+    if mode == "train":
+        s, a, sh = build_train(cfg, shape, rules, moe_path=moe_path,
+                               param_dtype=param_dtype, remat=remat)
+        donate = (0, 1)          # params + optimizer state
+    elif mode == "prefill":
+        s, a, sh = build_prefill(cfg, shape, rules, moe_path=moe_path,
+                                 param_dtype=param_dtype,
+                                 window_override=window_override)
+        donate = (2,)            # the cache being populated
+    else:
+        s, a, sh = build_decode(cfg, shape, rules, param_dtype=param_dtype)
+        donate = (2,)            # the decode cache
+    return s, a, sh, rules, donate

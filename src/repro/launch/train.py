@@ -1,0 +1,76 @@
+"""Training driver.
+
+Trains any registered architecture on the synthetic LM pipeline.  On this
+CPU container use ``--reduced`` or explicit size overrides; on real
+hardware the same ``make_train_step`` lowers under the production mesh
+(see ``launch/dryrun.py`` for the sharded step).
+
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --reduced \
+      --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.training.data import SyntheticLM
+from repro.training.optimizer import OptimizerConfig
+from repro.training.schedule import ScheduleConfig
+from repro.training.train_loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="wsd",
+                    choices=("wsd", "cosine", "linear", "constant"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"[train] {cfg.name}: params={cfg.params_total / 1e6:.1f}M "
+          f"schedule={args.schedule}", flush=True)
+
+    tcfg = TrainConfig(
+        optimizer=OptimizerConfig(lr=args.lr),
+        schedule=ScheduleConfig(
+            kind=args.schedule, peak_lr=args.lr,
+            warmup_steps=max(10, args.steps // 10), total_steps=args.steps,
+        ),
+    )
+    data = SyntheticLM(
+        cfg.vocab_size, args.seq, args.batch, seed=args.seed,
+        enc_seq=cfg.encoder_seq if cfg.is_encoder_decoder else None,
+        d_model=cfg.d_model if cfg.is_encoder_decoder else None,
+    )
+
+    def log(step, m):
+        print(f"[train] step={step:4d} loss={m['loss']:.4f} "
+              f"lr={m['lr']:.2e} gnorm={m['grad_norm']:.3f} "
+              f"wall={m['wall_s']:.1f}s", flush=True)
+
+    params, opt_state, history = train(
+        cfg, tcfg, iter(data), args.steps,
+        seed=args.seed, log_every=args.log_every, callback=log,
+    )
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(json.dumps({
+        "arch": cfg.name, "steps": args.steps,
+        "loss_first": round(first, 4), "loss_last": round(last, 4),
+        "improved": bool(last < first),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    init_params,
+    forward,
+    loss_fn,
+    prefill,
+    decode_step,
+    init_cache,
+    param_axes,
+)

@@ -1,0 +1,171 @@
+"""Attention blocks: full/causal, sliding-window, GQA, with KV cache decode.
+
+Cache contract (per attention layer):
+  ``k``/``v``      : (B, S_cache, n_kv, head_dim)
+  ``slot_pos``     : (B, S_cache) int32 — absolute position held in each slot,
+                     -1 when empty.  Full caches write slot = pos; windowed
+                     caches write slot = pos % window (ring buffer).  RoPE is
+                     applied at WRITE time, so ring overwrites are safe.
+The per-sequence decode position ``t`` (B,) lives at the cache-tree top level
+and is shared by all layers — per-sequence so continuous batching can decode
+ragged batches in lockstep.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ModelConfig
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+from repro.models.layers import apply_rope
+from repro.models.params import boxed_normal, boxed_zeros
+
+
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": boxed_normal(kq, (d, nq, hd), ("embed", "heads", None), s, dtype),
+        "wk": boxed_normal(kk, (d, nkv, hd), ("embed", "kv_heads", None), s, dtype),
+        "wv": boxed_normal(kv, (d, nkv, hd), ("embed", "kv_heads", None), s, dtype),
+        "wo": boxed_normal(ko, (nq, hd, d), ("heads", None, "embed"), (nq * hd) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = boxed_zeros((nq, hd), ("heads", None), dtype)
+        p["bk"] = boxed_zeros((nkv, hd), ("kv_heads", None), dtype)
+        p["bv"] = boxed_zeros((nkv, hd), ("kv_heads", None), dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x_q, x_kv):
+    q = jnp.einsum("bsd,dnh->bsnh", x_q, p["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x_kv, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x_kv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def init_layer_cache(
+    cfg: ModelConfig, batch: int, cache_len: int, dtype
+) -> dict:
+    nkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, nkv, hd), dtype=dtype),
+        "v": jnp.zeros((batch, cache_len, nkv, hd), dtype=dtype),
+        "slot_pos": jnp.full((batch, cache_len), -1, dtype=jnp.int32),
+    }
+
+
+def attention_full(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                  # (B, S, d)
+    positions: jax.Array,          # (S,)
+    *,
+    window: int = 0,
+    causal: bool = True,
+    impl: Optional[str] = None,
+    cache: Optional[dict] = None,  # if given, prefill: populate and return it
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = _project_qkv(cfg, p, x, x)
+    q = shard(q, "batch", "seq_act", "heads", None)
+    k = shard(k, "batch", "seq_act", "kv_heads", None)
+    v = shard(v, "batch", "seq_act", "kv_heads", None)
+    q = apply_rope(q, positions[None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[None, :], cfg.rope_theta)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, impl=impl)
+    out = shard(out, "batch", "seq_act", "heads", None)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    new_cache = None
+    if cache is not None:
+        new_cache = _write_prefill_cache(cache, k, v, positions, window)
+    return y, new_cache
+
+
+def _write_prefill_cache(cache, k, v, positions, window):
+    """Write a prefilled sequence into the (possibly ring) cache."""
+    cache_len = cache["k"].shape[1]
+    b = k.shape[0]
+    s = k.shape[1]
+    if window and cache_len < s:
+        # ring cache shorter than the sequence: only the tail survives
+        k_tail = k[:, -cache_len:]
+        v_tail = v[:, -cache_len:]
+        pos_tail = positions[-cache_len:]
+        order = jnp.argsort(pos_tail % cache_len)
+        return {
+            "k": k_tail[:, order].astype(cache["k"].dtype),
+            "v": v_tail[:, order].astype(cache["v"].dtype),
+            "slot_pos": jnp.broadcast_to(
+                pos_tail[order].astype(jnp.int32)[None, :], (b, cache_len)
+            ),
+        }
+    # full cache (or ring larger than seq): slot = pos (% cache_len)
+    slots = positions % cache_len
+    kc = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+    vc = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+    sp = cache["slot_pos"].at[:, slots].set(positions.astype(jnp.int32)[None, :])
+    return {"k": kc, "v": vc, "slot_pos": sp}
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                  # (B, 1, d)
+    t: jax.Array,                  # (B,) int32 — per-sequence absolute position
+    cache: dict,
+    *,
+    window: int = 0,
+    impl: Optional[str] = None,
+) -> Tuple[jax.Array, dict]:
+    """One-token decode against the cache; returns (out (B,1,d), new cache)."""
+    b = x.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
+    q, k, v = _project_qkv(cfg, p, x, x)
+    q = apply_rope(q, t[:, None], cfg.rope_theta)
+    k = apply_rope(k, t[:, None], cfg.rope_theta)
+
+    cache_len = cache["k"].shape[1]
+    slot = (t % cache_len).astype(jnp.int32)          # (B,)
+    bidx = jnp.arange(b)
+    kc = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    sp = cache["slot_pos"].at[bidx, slot].set(t)
+    kc = shard(kc, "batch", "kv_seq", "kv_heads", None)
+    vc = shard(vc, "batch", "kv_seq", "kv_heads", None)
+
+    valid = (sp >= 0) & (sp <= t[:, None])            # (B, S_cache)
+    if window:
+        valid &= sp > (t[:, None] - window)
+    out = ops.decode_attention(q[:, 0], kc, vc, valid, impl=impl)  # (B,nq,hd)
+    y = jnp.einsum("bnh,nhd->bd", out, p["wo"])[:, None, :]
+    return y, {"k": kc, "v": vc, "slot_pos": sp}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder). KV computed once from encoder output.
+# ---------------------------------------------------------------------------
+def cross_attention_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array):
+    k = jnp.einsum("bsd,dnh->bsnh", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", enc_out, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return k, v
+
+
+def cross_attention(cfg: ModelConfig, p: dict, x: jax.Array, k: jax.Array, v: jax.Array):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    out = ops.flash_attention(q, k, v, causal=False)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"])

@@ -1,0 +1,104 @@
+"""RecurrentGemma / Griffin recurrent block (RG-LRU + temporal conv).
+
+Structure (pre-normed input, residual added by caller):
+  branch a: x -> linear -> causal depthwise conv1d (kernel 4) -> RG-LRU
+  branch b: x -> linear -> GeLU
+  out     : (a * b) -> linear
+
+RG-LRU:  a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t)),
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(W_i x_t) * x_t)
+Gates use block-diagonal weights (NUM_BLOCKS blocks), as in the paper.
+
+Decode state per layer:
+  ``conv``  (B, K-1, w) — trailing conv window
+  ``h``     (B, w) fp32 — recurrent state
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ModelConfig
+from repro.kernels import ops
+from repro.models.params import boxed_normal, boxed_zeros, boxed_value
+
+CONV_K = 4
+NUM_BLOCKS = 8
+C_RGLRU = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    bs = w // NUM_BLOCKS
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    # Lambda init so that softplus(Lambda) gives decay a in [0.9, 0.999]^(1/c)
+    lam0 = jnp.log(jnp.expm1(-jnp.log(jax.random.uniform(
+        ks[5], (w,), minval=0.9, maxval=0.999)) / C_RGLRU))
+    return {
+        "wx": boxed_normal(ks[0], (d, w), ("embed", "ff"), s, dtype),
+        "wgate": boxed_normal(ks[1], (d, w), ("embed", "ff"), s, dtype),
+        "conv_w": boxed_normal(ks[2], (CONV_K, w), (None, "ff"), 0.5, dtype),
+        "conv_b": boxed_zeros((w,), ("ff",), dtype),
+        "gate_a": boxed_normal(ks[3], (NUM_BLOCKS, bs, bs), (None, "ff", None), bs ** -0.5, dtype),
+        "gate_i": boxed_normal(ks[4], (NUM_BLOCKS, bs, bs), (None, "ff", None), bs ** -0.5, dtype),
+        "lam": boxed_value(lam0, ("ff",)),
+        "wo": boxed_normal(jax.random.fold_in(key, 7), (w, d), ("ff", "embed"), w ** -0.5, dtype),
+    }
+
+
+def _block_diag(x: jax.Array, wblk: jax.Array) -> jax.Array:
+    """(B,T,w) x (NB, bs, bs) -> (B,T,w) block-diagonal matmul."""
+    b, t, w = x.shape
+    nb, bs, _ = wblk.shape
+    xb = x.reshape(b, t, nb, bs)
+    yb = jnp.einsum("btns,nsc->btnc", xb, wblk)
+    return yb.reshape(b, t, w)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d, kernel K. prev: (B, K-1, w) trailing context."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), dtype=x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)       # (B, T+K-1, w)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :], xp[:, -(k - 1):, :]
+
+
+def rglru_block(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                     # (B, T, d) pre-normed
+    state: Optional[dict] = None,
+) -> Tuple[jax.Array, dict]:
+    xa = jnp.einsum("btd,dw->btw", x, p["wx"])
+    xb = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["wgate"]))
+
+    conv_prev = state["conv"] if state else None
+    xa, conv_new = _causal_conv(xa, p["conv_w"], p["conv_b"], conv_prev)
+
+    r = jax.nn.sigmoid(_block_diag(xa, p["gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag(xa, p["gate_i"]).astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                            # (B,T,w) in (0,1)
+
+    gated = (i * xa.astype(jnp.float32)).astype(x.dtype)
+    h0 = state["h"] if state else None
+    h, h_last = ops.rglru(gated, a.astype(x.dtype), h0)
+
+    y = jnp.einsum("btw,wd->btd", h.astype(x.dtype) * xb, p["wo"])
+    new_state = {"conv": conv_new, "h": h_last}
+    return y, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, w), dtype=dtype),
+        "h": jnp.zeros((batch, w), dtype=jnp.float32),
+    }

@@ -1,0 +1,109 @@
+"""Shared layers: norms, MLPs, embeddings, rotary positions."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.params import Boxed, boxed_normal, boxed_ones, boxed_zeros
+
+# ---------------------------------------------------------------------------
+# Norms (always computed in fp32).
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dtype) -> dict:
+    p = {"scale": boxed_ones((cfg.d_model,), ("embed",), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = boxed_zeros((cfg.d_model,), ("embed",), dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mean = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mean) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP: SwiGLU (wi_gate, wi_up, wo) or GELU (wi, wo).
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None, dtype=jnp.float32) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = ff ** -0.5
+    if cfg.mlp == "swiglu":
+        return {
+            "wi_gate": boxed_normal(k1, (d, ff), ("embed", "ff"), s_in, dtype),
+            "wi_up": boxed_normal(k2, (d, ff), ("embed", "ff"), s_in, dtype),
+            "wo": boxed_normal(k3, (ff, d), ("ff", "embed"), s_out, dtype),
+        }
+    return {
+        "wi": boxed_normal(k1, (d, ff), ("embed", "ff"), s_in, dtype),
+        "wo": boxed_normal(k2, (ff, d), ("ff", "embed"), s_out, dtype),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["wi_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["wi"]))
+    if h.ndim == 3:
+        h = shard(h, "batch", None, "ff")
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings.
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig, dtype) -> Boxed:
+    return boxed_normal(key, (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), 1.0, dtype)
+
+
+def embed_tokens(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(embed, tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding.
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)          # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    if theta <= 0.0:
+        return x
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal embeddings (seq, d_model)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, d_model, 2, dtype=jnp.float32) * (-jnp.log(10_000.0) / d_model)
+    )
+    pe = jnp.zeros((seq_len, d_model), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe

@@ -1,0 +1,719 @@
+"""Composable language model.
+
+One code path serves all 10 architectures: the config's ``block_pattern``
+(attn / local-attn / rglru / rwkv) is scanned over layers as *super-blocks*
+(one repetition of the pattern), with any ``tail_blocks`` unrolled after the
+scan.  Whisper adds an encoder stack + cross-attention in the decoder.
+
+Entry points
+------------
+``init_params``  — (traceable) build the parameter tree; use with
+                   ``jax.eval_shape`` for abstract 72B/1T initialization.
+``param_axes``   — logical-axes tree matching ``init_params`` (sharding).
+``forward``      — full-sequence logits (training).
+``loss_fn``      — next-token cross-entropy (optionally seq-chunked).
+``init_cache``   — decode cache pytree for a (batch, cache_len).
+``prefill``      — populate the cache from a prompt, return last logits.
+``decode_step``  — one token for every sequence in the batch.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ATTN, LOCAL_ATTN, RGLRU, RWKV, ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import griffin, layers, moe as moe_lib, rwkv as rwkv_lib
+from repro.models.params import Boxed, axes_of, is_boxed, unbox, values_of
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg: ModelConfig, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {"norm1": layers.init_norm(cfg, dtype)}
+    if kind in (ATTN, LOCAL_ATTN):
+        p["attn"] = attn_lib.init_attention(k1, cfg, dtype)
+        p["norm2"] = layers.init_norm(cfg, dtype)
+        if cfg.num_experts:
+            p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = layers.init_mlp(k2, cfg, dtype=dtype)
+    elif kind == RGLRU:
+        p["rglru"] = griffin.init_rglru(k1, cfg, dtype)
+        p["norm2"] = layers.init_norm(cfg, dtype)
+        p["mlp"] = layers.init_mlp(k2, cfg, dtype=dtype)
+    elif kind == RWKV:
+        p["rwkv"] = rwkv_lib.init_rwkv(k1, cfg, dtype)
+        p["norm2"] = layers.init_norm(cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_enc_block(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": layers.init_norm(cfg, dtype),
+        "attn": attn_lib.init_attention(k1, cfg, dtype),
+        "norm2": layers.init_norm(cfg, dtype),
+        "mlp": layers.init_mlp(k2, cfg, dtype=dtype),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig, dtype) -> dict:
+    """Whisper decoder block: self-attn + cross-attn + mlp."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": layers.init_norm(cfg, dtype),
+        "attn": attn_lib.init_attention(k1, cfg, dtype),
+        "norm_x": layers.init_norm(cfg, dtype),
+        "xattn": attn_lib.init_attention(k2, cfg, dtype, cross=True),
+        "norm2": layers.init_norm(cfg, dtype),
+        "mlp": layers.init_mlp(k3, cfg, dtype=dtype),
+    }
+
+
+def _stack(init_fn, key, n: int):
+    """vmap-stack n layer inits; prepend the 'layers' logical axis."""
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(init_fn)(keys)
+    return jax.tree.map(
+        lambda b: Boxed(b.value, ("layers",) + b.axes), stacked, is_leaf=is_boxed
+    )
+
+
+def _pattern_layout(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    """(n_repeats, pattern, tail) with n_repeats*len(pattern)+len(tail)==L."""
+    pat = cfg.block_pattern
+    n_rep = (cfg.num_layers - len(cfg.tail_blocks)) // len(pat)
+    assert n_rep * len(pat) + len(cfg.tail_blocks) == cfg.num_layers, cfg.name
+    return n_rep, pat, cfg.tail_blocks
+
+
+def init_params_boxed(cfg: ModelConfig, key, dtype=jnp.float32):
+    ke, kl, kh, kt, kenc = jax.random.split(key, 5)
+    n_rep, pat, tail = _pattern_layout(cfg)
+    p: Dict[str, Any] = {
+        "embed": layers.init_embed(ke, cfg, dtype),
+        "final_norm": layers.init_norm(cfg, dtype),
+        "blocks": {},
+        "tail": {},
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.tree.map(
+            lambda b: b, layers.init_embed(kh, cfg, dtype), is_leaf=is_boxed
+        )
+    if cfg.is_encoder_decoder:
+        p["blocks"]["dec"] = _stack(
+            lambda k: _init_dec_block(k, cfg, dtype), kl, cfg.num_layers
+        )
+        p["encoder"] = {
+            "blocks": _stack(lambda k: _init_enc_block(k, cfg, dtype), kenc, cfg.encoder_layers),
+            "final_norm": layers.init_norm(cfg, dtype),
+        }
+    else:
+        for i, kind in enumerate(pat):
+            p["blocks"][f"p{i}_{kind}"] = _stack(
+                lambda k, kind=kind: _init_block(k, cfg, kind, dtype),
+                jax.random.fold_in(kl, i),
+                n_rep,
+            )
+        for j, kind in enumerate(tail):
+            p["tail"][f"t{j}_{kind}"] = _init_block(
+                jax.random.fold_in(kt, j), cfg, kind, dtype
+            )
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    return values_of(init_params_boxed(cfg, key, dtype))
+
+
+@functools.lru_cache(maxsize=64)
+def _param_axes_cached(cfg: ModelConfig, dtype_name: str):
+    dtype = jnp.dtype(dtype_name)
+    boxed = jax.eval_shape(
+        lambda k: init_params_boxed(cfg, k, dtype), jax.random.key(0)
+    )
+    return axes_of(boxed)
+
+
+def param_axes(cfg: ModelConfig, dtype=jnp.float32):
+    return _param_axes_cached(cfg, jnp.dtype(dtype).name)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — no allocation (dry-run / cost model)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.key(0)
+    )
+
+
+@functools.lru_cache(maxsize=128)
+def param_count(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    import math
+
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack iteration.
+#
+# ``jax.lax.scan`` is the production path (compact HLO, fast compiles).
+# ``REPRO_UNROLL_SCANS=1`` switches every layer scan to a Python loop: the
+# dry-run sets it so ``compiled.cost_analysis()`` counts every layer's
+# FLOPs/bytes/collectives instead of the scan body once (XLA's cost model
+# does not multiply while-loop trip counts) — see EXPERIMENTS.md §Dry-run.
+# ---------------------------------------------------------------------------
+def _unroll_scans() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCANS") == "1"
+
+
+def _scan(f, init, xs, length: Optional[int] = None):
+    """jax.lax.scan, or an unrolled Python loop under REPRO_UNROLL_SCANS."""
+    if not _unroll_scans():
+        return jax.lax.scan(f, init, xs, length=length)
+    n = length
+    if n is None:
+        n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = ys[0] if ys else None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# Block application (shared by forward / prefill / decode).
+# ---------------------------------------------------------------------------
+def _ffn(cfg: ModelConfig, p: dict, x, moe_path: str):
+    if cfg.num_experts:
+        y, aux = moe_lib.moe_apply(cfg, p["moe"], x, path=moe_path)
+        return y, aux
+    return layers.apply_mlp(cfg, p["mlp"], x), 0.0
+
+
+def _apply_block_full(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[dict],
+    *,
+    window_global: int = 0,
+    moe_path: str = "local",
+    impl: Optional[str] = None,
+):
+    """Full-sequence (train / prefill) application of one block."""
+    aux = 0.0
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.local_window if kind == LOCAL_ATTN else window_global
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        attn_cache = cache["attn"] if cache is not None else None
+        y, new_attn_cache = attn_lib.attention_full(
+            cfg, p["attn"], h, positions, window=window, impl=impl, cache=attn_cache
+        )
+        x = x + y
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        y2, aux = _ffn(cfg, p, h2, moe_path)
+        x = x + y2
+        new_cache = {"attn": new_attn_cache} if cache is not None else None
+    elif kind == RGLRU:
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        st = cache["rglru"] if cache is not None else None
+        y, new_st = griffin.rglru_block(cfg, p["rglru"], h, st)
+        x = x + y
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        y2, aux = _ffn(cfg, p, h2, "local") if cfg.num_experts else (
+            layers.apply_mlp(cfg, p["mlp"], h2), 0.0)
+        x = x + y2
+        new_cache = {"rglru": new_st} if cache is not None else None
+    elif kind == RWKV:
+        st = cache["rwkv"] if cache is not None else None
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        y, shift_tm, wkv = rwkv_lib.time_mix(
+            cfg, p["rwkv"], h,
+            st["shift_tm"] if st else None,
+            st["wkv"] if st else None,
+            impl=impl,
+        )
+        x = x + y
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        y2, shift_cm = rwkv_lib.channel_mix(cfg, p["rwkv"], h2, st["shift_cm"] if st else None)
+        x = x + y2
+        new_cache = (
+            {"rwkv": {"shift_tm": shift_tm, "shift_cm": shift_cm, "wkv": wkv}}
+            if cache is not None else None
+        )
+    else:
+        raise ValueError(kind)
+    x = shard(x, "batch", "seq_act", None)
+    return x, new_cache, aux
+
+
+def _apply_block_decode(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x: jax.Array,              # (B, 1, d)
+    t: jax.Array,              # (B,)
+    cache: dict,
+    *,
+    window_global: int = 0,
+    impl: Optional[str] = None,
+):
+    aux = 0.0
+    if kind in (ATTN, LOCAL_ATTN):
+        window = cfg.local_window if kind == LOCAL_ATTN else window_global
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        y, new_attn = attn_lib.attention_decode(
+            cfg, p["attn"], h, t, cache["attn"], window=window, impl=impl
+        )
+        x = x + y
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        y2, aux = _ffn(cfg, p, h2, "local")
+        x = x + y2
+        new_cache = {"attn": new_attn}
+    elif kind == RGLRU:
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        y, new_st = griffin.rglru_block(cfg, p["rglru"], h, cache["rglru"])
+        x = x + y
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.apply_mlp(cfg, p["mlp"], h2)
+        new_cache = {"rglru": new_st}
+    elif kind == RWKV:
+        st = cache["rwkv"]
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        y, shift_tm, wkv = rwkv_lib.time_mix(
+            cfg, p["rwkv"], h, st["shift_tm"], st["wkv"], impl=impl
+        )
+        x = x + y
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        y2, shift_cm = rwkv_lib.channel_mix(cfg, p["rwkv"], h2, st["shift_cm"])
+        x = x + y2
+        new_cache = {"rwkv": {"shift_tm": shift_tm, "shift_cm": shift_cm, "wkv": wkv}}
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding in/out.
+# ---------------------------------------------------------------------------
+def _embed_in(cfg: ModelConfig, params, inputs, positions) -> jax.Array:
+    if inputs.ndim == 3:           # precomputed embeddings (VLM / audio enc)
+        x = inputs.astype(params["embed"].dtype)
+    else:
+        x = layers.embed_tokens(params["embed"], inputs)
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype) if cfg.is_encoder_decoder else x
+    if cfg.is_encoder_decoder and inputs.ndim == 2:
+        # whisper decoder: absolute sinusoidal positions
+        pe = _abs_pos(positions, cfg.d_model).astype(x.dtype)
+        x = x + pe[None] if pe.ndim == 2 else x + pe
+    return x
+
+
+def _abs_pos(positions: jax.Array, d_model: int) -> jax.Array:
+    pos = positions.astype(jnp.float32)[..., None]
+    div = jnp.exp(
+        jnp.arange(0, d_model, 2, dtype=jnp.float32) * (-jnp.log(10_000.0) / d_model)
+    )
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _unembed(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"].T
+    else:
+        w = params["lm_head"].T
+    # d^-0.5 keeps init logit variance O(1) (embed tables are unit-scale)
+    logits = jnp.einsum("...d,dv->...v", x, w) * (cfg.d_model ** -0.5)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Forward (full sequence).
+# ---------------------------------------------------------------------------
+
+def _maybe_checkpoint(fn, remat):
+    """remat: False | True/'full' (recompute everything) | 'dots' (save
+    matmul outputs, recompute elementwise — less recompute FLOPs for more
+    activation HBM; §Perf lever for dense training)."""
+    if not remat:
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _run_blocks_full(
+    cfg, params, x, positions, caches, *, window_global, moe_path, impl, remat
+):
+    """Scan super-blocks; returns (x, new_caches, aux_sum)."""
+    n_rep, pat, tail = _pattern_layout(cfg)
+    aux_total = 0.0
+
+    def superblock(x, slices):
+        p_slices, c_slices = slices
+        aux = 0.0
+        new_cs = {}
+        for i, kind in enumerate(pat):
+            key = f"p{i}_{kind}"
+            c_in = c_slices.get(key) if c_slices is not None else None
+            x, new_c, a = _apply_block_full(
+                cfg, kind, p_slices[key], x, positions, c_in,
+                window_global=window_global, moe_path=moe_path, impl=impl,
+            )
+            if c_slices is not None:
+                new_cs[key] = new_c
+            aux = aux + a
+        return x, (new_cs if c_slices is not None else None), aux
+
+    body = _maybe_checkpoint(superblock, remat)
+
+    def scan_body(carry, slices):
+        x, aux = carry
+        x, new_c, a = body(x, slices)
+        return (x, aux + a), new_c
+
+    block_params = {k: v for k, v in params["blocks"].items()}
+    block_caches = caches["blocks"] if caches is not None else None
+    xs = (block_params, block_caches)
+    if block_caches is None:
+        xs = (block_params, None)
+        # jax.lax.scan needs a pytree with consistent leading dims; None ok
+    (x, aux_total), new_block_caches = _scan(
+        scan_body, (x, 0.0), xs, length=n_rep
+    )
+
+    new_tail = {}
+    for j, kind in enumerate(tail):
+        key = f"t{j}_{kind}"
+        c_in = caches["tail"].get(key) if caches is not None else None
+        x, new_c, a = _apply_block_full(
+            cfg, kind, params["tail"][key], x, positions, c_in,
+            window_global=window_global, moe_path=moe_path, impl=impl,
+        )
+        aux_total = aux_total + a
+        if caches is not None:
+            new_tail[key] = new_c
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"blocks": new_block_caches, "tail": new_tail}
+    return x, new_caches, aux_total
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    inputs,                       # (B,S) tokens or (B,S,d) embeds
+    *,
+    enc_inputs=None,              # whisper: (B, Senc, d) frame embeddings
+    window: int = 0,              # 0=full causal; >0 sliding (long-context)
+    moe_path: str = "local",
+    impl: Optional[str] = None,
+    remat: bool = False,
+):
+    """Full-sequence forward -> logits (B, S, vocab)."""
+    s = inputs.shape[1]
+    positions = jnp.arange(s)
+    x = _embed_in(cfg, params, inputs, positions)
+    x = shard(x, "batch", "seq_act", None)
+    aux = 0.0
+
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(cfg, params, enc_inputs, impl=impl, remat=remat)
+        x, _, aux = _run_dec_blocks_full(
+            cfg, params, x, positions, enc_out, None, impl=impl, remat=remat,
+            window=window,
+        )
+    else:
+        x, _, aux = _run_blocks_full(
+            cfg, params, x, positions, None,
+            window_global=window, moe_path=moe_path, impl=impl, remat=remat,
+        )
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    return _unembed(cfg, params, x), aux
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder / decoder stacks.
+# ---------------------------------------------------------------------------
+def _encode(cfg: ModelConfig, params, enc_inputs, *, impl=None, remat=False):
+    enc = params["encoder"]
+    x = enc_inputs.astype(params["embed"].dtype)
+    pe = _abs_pos(jnp.arange(x.shape[1]), cfg.d_model).astype(x.dtype)
+    x = x + pe[None]
+
+    def body(x, p):
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        y, _ = attn_lib.attention_full(
+            cfg, p["attn"], h, jnp.arange(x.shape[1]), causal=False, impl=impl
+        )
+        x = x + y
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.apply_mlp(cfg, p["mlp"], h2)
+        return x, None
+
+    body = _maybe_checkpoint(body, remat)
+    x, _ = _scan(body, x, enc["blocks"])
+    return layers.apply_norm(cfg, enc["final_norm"], x)
+
+
+def _run_dec_blocks_full(cfg, params, x, positions, enc_out, caches, *, impl, remat,
+                         window: int = 0):
+    def body_fn(x, slices):
+        p, c = slices
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        attn_cache = c["attn"] if c is not None else None
+        y, new_attn = attn_lib.attention_full(
+            cfg, p["attn"], h, positions, window=window, impl=impl, cache=attn_cache
+        )
+        x = x + y
+        hx = layers.apply_norm(cfg, p["norm_x"], x)
+        x = x + attn_lib.cross_attention(
+            cfg, p["xattn"], hx,
+            *attn_lib.cross_attention_kv(cfg, p["xattn"], enc_out),
+        )
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.apply_mlp(cfg, p["mlp"], h2)
+        new_c = {"attn": new_attn} if c is not None else None
+        return x, new_c
+
+    body = _maybe_checkpoint(body_fn, remat)
+
+    def scan_body(x, slices):
+        return body(x, slices)
+
+    caches_in = caches["blocks"]["dec"] if caches is not None else None
+    x, new_caches = _scan(
+        scan_body, x, (params["blocks"]["dec"], caches_in)
+    )
+    out_caches = None
+    if caches is not None:
+        out_caches = {"blocks": {"dec": new_caches}, "tail": {}}
+    return x, out_caches, 0.0
+
+
+# ---------------------------------------------------------------------------
+# Loss.
+# ---------------------------------------------------------------------------
+def loss_fn(
+    cfg: ModelConfig,
+    params,
+    batch: dict,
+    *,
+    window: int = 0,
+    moe_path: str = "local",
+    impl: Optional[str] = None,
+    remat: bool = True,
+    aux_weight: float = 0.01,
+):
+    """Next-token CE. batch: {"inputs": (B,S) or (B,S,d), "labels": (B,S)}."""
+    logits, aux = forward(
+        cfg, params, batch["inputs"],
+        enc_inputs=batch.get("enc_inputs"),
+        window=window, moe_path=moe_path, impl=impl, remat=remat,
+    )
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    safe_labels = jnp.maximum(labels, 0)
+    nll = -jnp.take_along_axis(logp, safe_labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Cache init / prefill / decode.
+# ---------------------------------------------------------------------------
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                 window_global: int, dtype):
+    if kind in (ATTN, LOCAL_ATTN):
+        if kind == LOCAL_ATTN:
+            clen = min(cfg.local_window, cache_len)
+        elif window_global:
+            clen = min(window_global, cache_len)
+        else:
+            clen = cache_len
+        return {"attn": attn_lib.init_layer_cache(cfg, batch, clen, dtype)}
+    if kind == RGLRU:
+        return {"rglru": griffin.init_rglru_state(cfg, batch, dtype)}
+    if kind == RWKV:
+        return {"rwkv": rwkv_lib.init_rwkv_state(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    cache_len: int,
+    *,
+    window: int = 0,
+    dtype=jnp.float32,
+    enc_out: Optional[jax.Array] = None,
+):
+    """Decode cache. ``window`` > 0 = sliding-window mode for global-attn."""
+    n_rep, pat, tail = _pattern_layout(cfg)
+    cache: Dict[str, Any] = {"t": jnp.zeros((batch,), jnp.int32), "blocks": {}, "tail": {}}
+    if cfg.is_encoder_decoder:
+        clen = min(window, cache_len) if window else cache_len
+
+        def one(_):
+            return {"attn": attn_lib.init_layer_cache(cfg, batch, clen, dtype)}
+        cache["blocks"]["dec"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[one(i) for i in range(cfg.num_layers)],
+        )
+        return cache
+    for i, kind in enumerate(pat):
+        key = f"p{i}_{kind}"
+        per = [
+            _layer_cache(cfg, kind, batch, cache_len, window, dtype)
+            for _ in range(n_rep)
+        ]
+        cache["blocks"][key] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+    for j, kind in enumerate(tail):
+        cache["tail"][f"t{j}_{kind}"] = _layer_cache(
+            cfg, kind, batch, cache_len, window, dtype
+        )
+    return cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params,
+    inputs,
+    cache,
+    *,
+    enc_inputs=None,
+    window: int = 0,
+    moe_path: str = "local",
+    impl: Optional[str] = None,
+):
+    """Run the prompt through the model, populating ``cache``.
+
+    Returns (last-token logits (B, vocab), new cache with cross-attn KV for
+    enc-dec models stashed under ``cache["cross"]``)."""
+    s = inputs.shape[1]
+    positions = jnp.arange(s)
+    x = _embed_in(cfg, params, inputs, positions)
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(cfg, params, enc_inputs, impl=impl)
+        x, new_caches, _ = _run_dec_blocks_full(
+            cfg, params, x, positions, enc_out, cache, impl=impl, remat=False,
+            window=window,
+        )
+        new_caches["cross"] = _all_cross_kv(cfg, params, enc_out)
+    else:
+        x, new_caches, _ = _run_blocks_full(
+            cfg, params, x, positions, cache,
+            window_global=window, moe_path=moe_path, impl=impl, remat=False,
+        )
+    new_caches["t"] = jnp.full((inputs.shape[0],), s, jnp.int32)
+    x = layers.apply_norm(cfg, params["final_norm"], x[:, -1:, :])
+    return _unembed(cfg, params, x)[:, 0], new_caches
+
+
+def _all_cross_kv(cfg, params, enc_out):
+    def kv_one(p):
+        k, v = attn_lib.cross_attention_kv(cfg, p["xattn"], enc_out)
+        return {"k": k, "v": v}
+    return jax.vmap(
+        lambda p: kv_one(p), in_axes=(0,)
+    )(params["blocks"]["dec"])
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    tokens,                     # (B,) int32 — next input token per sequence
+    cache,
+    *,
+    window: int = 0,
+    impl: Optional[str] = None,
+):
+    """One decode step. Returns (logits (B, vocab), new cache)."""
+    t = cache["t"]
+    x = layers.embed_tokens(params["embed"], tokens[:, None])
+    if cfg.is_encoder_decoder:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        pe = jax.vmap(lambda tt: _abs_pos(tt[None], cfg.d_model)[0])(t)
+        x = x + pe[:, None, :].astype(x.dtype)
+        x, new_caches = _decode_dec_blocks(cfg, params, x, t, cache, impl=impl,
+                                           window=window)
+    else:
+        n_rep, pat, tail = _pattern_layout(cfg)
+
+        def scan_body(x, slices):
+            p_slices, c_slices = slices
+            new_cs = {}
+            for i, kind in enumerate(pat):
+                key = f"p{i}_{kind}"
+                x, new_c, _ = _apply_block_decode(
+                    cfg, kind, p_slices[key], x, t, c_slices[key],
+                    window_global=window, impl=impl,
+                )
+                new_cs[key] = new_c
+            return x, new_cs
+
+        x, new_block_caches = _scan(
+            scan_body, x, (params["blocks"], cache["blocks"])
+        )
+        new_tail = {}
+        for j, kind in enumerate(tail):
+            key = f"t{j}_{kind}"
+            x, new_c, _ = _apply_block_decode(
+                cfg, kind, params["tail"][key], x, t, cache["tail"][key],
+                window_global=window, impl=impl,
+            )
+            new_tail[key] = new_c
+        new_caches = {"blocks": new_block_caches, "tail": new_tail}
+
+    new_caches["t"] = t + 1
+    if "cross" in cache:
+        new_caches["cross"] = cache["cross"]
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    return _unembed(cfg, params, x)[:, 0], new_caches
+
+
+def _decode_dec_blocks(cfg, params, x, t, cache, *, impl, window: int = 0):
+    cross = cache["cross"]
+
+    def scan_body(x, slices):
+        p, c, xkv = slices
+        h = layers.apply_norm(cfg, p["norm1"], x)
+        y, new_attn = attn_lib.attention_decode(
+            cfg, p["attn"], h, t, c["attn"], window=window, impl=impl
+        )
+        x = x + y
+        hx = layers.apply_norm(cfg, p["norm_x"], x)
+        x = x + attn_lib.cross_attention(cfg, p["xattn"], hx, xkv["k"], xkv["v"])
+        h2 = layers.apply_norm(cfg, p["norm2"], x)
+        x = x + layers.apply_mlp(cfg, p["mlp"], h2)
+        return x, {"attn": new_attn}
+
+    x, new_dec = _scan(
+        scan_body, x, (params["blocks"]["dec"], cache["blocks"]["dec"], cross)
+    )
+    return x, {"blocks": {"dec": new_dec}, "tail": {}}

@@ -1,0 +1,64 @@
+"""Parameter trees with logical-axis annotations.
+
+Init functions build ``{name: Boxed(value, axes)}`` trees.  ``unbox`` splits
+them into a value tree (what jit sees) and an axes tree (what the dry-run
+turns into NamedShardings).  Init is pure-traceable, so abstract init via
+``jax.eval_shape`` never allocates the 72B/1T parameter sets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Boxed:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def boxed_normal(key, shape, axes, scale: float, dtype) -> Boxed:
+    assert len(shape) == len(axes), (shape, axes)
+    return Boxed(scale * jax.random.normal(key, shape, dtype=dtype), tuple(axes))
+
+
+def boxed_zeros(shape, axes, dtype) -> Boxed:
+    return Boxed(jnp.zeros(shape, dtype=dtype), tuple(axes))
+
+
+def boxed_ones(shape, axes, dtype) -> Boxed:
+    return Boxed(jnp.ones(shape, dtype=dtype), tuple(axes))
+
+
+def boxed_value(value, axes) -> Boxed:
+    return Boxed(value, tuple(axes))
+
+
+def unbox(tree):
+    """Split a Boxed tree into (values, axes) trees of identical structure."""
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return values, axes
+
+
+def values_of(tree):
+    return jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+
+
+def axes_of(tree):
+    return jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)

@@ -1,0 +1,128 @@
+"""RWKV-6 "Finch" block — attention-free, data-dependent decay.
+
+Two sub-blocks, each called by the model on a pre-normed input and added
+residually (standard RWKV structure):
+
+* ``time_mix``    — token-shift mixing, r/k/v/g projections, decay ``w_t``
+  from a low-rank MLP (the Finch innovation), matrix-valued per-head WKV
+  state with bonus ``u``.
+* ``channel_mix`` — token-shift + squared-ReLU FFN with sigmoid gate.
+
+Decode state per layer:
+  ``shift_tm`` (B, d)        — previous (normed) token for time-mix shift
+  ``shift_cm`` (B, d)        — previous (normed) token for channel-mix shift
+  ``wkv``      (B, H, hd, hd) fp32 — recurrent state
+Token-shift states hold the *normed* inputs, so prefill and decode agree.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ModelConfig
+from repro.kernels import ops
+from repro.models.params import boxed_normal, boxed_zeros
+
+DECAY_LORA_RANK = 96
+
+
+def init_rwkv(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    r = DECAY_LORA_RANK
+    return {
+        # time-mix
+        "mu": boxed_zeros((5, d), (None, "embed"), jnp.float32),  # r,k,v,w,g shifts
+        "wr": boxed_normal(ks[0], (d, d), ("embed", "heads_flat"), s, dtype),
+        "wk": boxed_normal(ks[1], (d, d), ("embed", "heads_flat"), s, dtype),
+        "wv": boxed_normal(ks[2], (d, d), ("embed", "heads_flat"), s, dtype),
+        "wg": boxed_normal(ks[3], (d, d), ("embed", "heads_flat"), s, dtype),
+        "wo": boxed_normal(ks[4], (d, d), ("heads_flat", "embed"), s, dtype),
+        "decay_a": boxed_normal(ks[5], (d, r), ("embed", None), s, dtype),
+        "decay_b": boxed_normal(ks[6], (r, d), (None, "heads_flat"), r ** -0.5, dtype),
+        "w0": boxed_zeros((d,), ("heads_flat",), jnp.float32),
+        "u": boxed_zeros((h, hd), ("heads_flat", None), jnp.float32),
+        # channel-mix
+        "cm_mu": boxed_zeros((d,), ("embed",), jnp.float32),
+        "cm_k": boxed_normal(ks[7], (d, cfg.d_ff), ("embed", "ff"), s, dtype),
+        "cm_v": boxed_normal(ks[8], (cfg.d_ff, d), ("ff", "embed"), cfg.d_ff ** -0.5, dtype),
+        "cm_r": boxed_normal(ks[9], (d, d), ("embed", "embed_out"), s, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """shifted[t] = x[t-1]; shifted[0] = prev (or 0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay in (0, 1): exp(-exp(w0 + tanh(x A) B))."""
+    lora = jnp.einsum(
+        "btd,dr->btr", xw.astype(jnp.float32), p["decay_a"].astype(jnp.float32)
+    )
+    logw = p["w0"] + jnp.einsum(
+        "btr,rd->btd", jnp.tanh(lora), p["decay_b"].astype(jnp.float32)
+    )
+    return jnp.exp(-jnp.exp(jnp.clip(logw, -8.0, 4.0)))
+
+
+def time_mix(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                       # (B, T, d) — pre-normed
+    shift_prev: Optional[jax.Array],    # (B, d) or None
+    wkv0: Optional[jax.Array],          # (B, H, hd, hd) or None
+    *,
+    impl: Optional[str] = None,
+):
+    b, t, d = x.shape
+    h = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+
+    shifted = _token_shift(x, shift_prev)
+    mu = p["mu"]
+    xr, xk, xv, xw, xg = [
+        x + (shifted - x) * mu[i][None, None, :].astype(x.dtype) for i in range(5)
+    ]
+    r = jnp.einsum("btd,de->bte", xr, p["wr"]).reshape(b, t, h, hd)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"]).reshape(b, t, h, hd)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"]).reshape(b, t, h, hd)
+    g = jnp.einsum("btd,de->bte", xg, p["wg"])
+    w = _decay(p, xw).reshape(b, t, h, hd).astype(x.dtype)
+
+    out, wkv = ops.rwkv6(r, k, v, w, p["u"], wkv0, impl=impl)   # (B,T,H,hd)
+    out = out.reshape(b, t, d) * jax.nn.silu(g)
+    y = jnp.einsum("bte,ed->btd", out, p["wo"])
+    return y, x[:, -1, :], wkv
+
+
+def channel_mix(
+    cfg: ModelConfig,
+    p: dict,
+    x: jax.Array,                       # (B, T, d) — pre-normed
+    shift_prev: Optional[jax.Array],
+):
+    shifted = _token_shift(x, shift_prev)
+    xk = x + (shifted - x) * p["cm_mu"][None, None, :].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["cm_k"])))
+    vv = jnp.einsum("btf,fd->btd", kk, p["cm_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", x, p["cm_r"]))
+    return rr * vv, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    return {
+        "shift_tm": jnp.zeros((batch, d), dtype=dtype),
+        "shift_cm": jnp.zeros((batch, d), dtype=dtype),
+        "wkv": jnp.zeros((batch, h, hd, hd), dtype=jnp.float32),
+    }

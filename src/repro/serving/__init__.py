@@ -1,0 +1,2 @@
+from repro.serving.engine import Engine, EngineConfig, Request  # noqa: F401
+from repro.serving.batching import ContinuousBatcher  # noqa: F401

@@ -1,0 +1,148 @@
+"""Inference engine: slot-based continuous batching over the model zoo.
+
+The engine owns a fixed batch of ``slots`` decode lanes sharing one cache
+pytree (the per-sequence ``t`` vector makes ragged lockstep decode safe).
+A new request is prefilled at batch 1 and scattered into a free slot; every
+``step()`` decodes one token for all live slots.  This is the execution
+layer underneath the paper's serving system: a reserved slice runs exactly
+this engine, and ``max_concurrency`` from the profile is its slot count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ModelConfig
+from repro.models import model as model_lib
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    slots: int = 8                  # concurrent decode lanes
+    cache_len: int = 512            # per-slot KV capacity
+    window: int = 0                 # sliding-window mode (long-context)
+    max_new_tokens: int = 64
+    temperature: float = 0.0        # 0 = greedy
+    dtype: Any = jnp.float32
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (P,) int32 tokens
+    max_new_tokens: int = 64
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    prefill_done: bool = False
+    finished: bool = False
+    enqueued_at: float = 0.0
+    finished_at: float = 0.0
+
+
+def _scatter_slot(cache_tree, sub_tree, slot: int):
+    """Write a batch-1 cache into batch slot ``slot`` of the shared cache.
+
+    Cache layout (see model.init_cache): leaves under ``blocks``/``cross``
+    are layer-stacked -> batch axis 1; ``tail`` entries and the per-seq
+    ``t`` counter are unstacked -> batch axis 0."""
+    flat_full = jax.tree_util.tree_flatten_with_path(cache_tree)
+    flat_one = jax.tree.leaves(sub_tree)
+    out = []
+    for (path, full), one in zip(flat_full[0], flat_one):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        batch_axis = 1 if keys and keys[0] in ("blocks", "cross") else 0
+        idx = (slice(None),) * batch_axis + (slot,)
+        src = jnp.take(one, 0, axis=batch_axis)
+        out.append(full.at[idx].set(src.astype(full.dtype)))
+    return jax.tree.unflatten(flat_full[1], out)
+
+
+class Engine:
+    """Continuous-batching engine for one model."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = EngineConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.cache = model_lib.init_cache(
+            cfg, ecfg.slots, ecfg.cache_len, window=ecfg.window, dtype=ecfg.dtype
+        )
+        self.slot_req: List[Optional[Request]] = [None] * ecfg.slots
+        self.slot_remaining = np.zeros(ecfg.slots, np.int32)
+        self.next_token = np.zeros(ecfg.slots, np.int32)
+        self.steps = 0
+
+        # jitted single-request prefill (batch 1) and batched decode
+        @jax.jit
+        def _prefill_one(params, tokens, cache1):
+            return model_lib.prefill(
+                cfg, params, tokens, cache1, window=ecfg.window
+            )
+
+        @jax.jit
+        def _decode(params, tokens, cache):
+            return model_lib.decode_step(
+                cfg, params, tokens, cache, window=ecfg.window
+            )
+
+        self._prefill_one = _prefill_one
+        self._decode = _decode
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    @property
+    def live(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    # ------------------------------------------------------------------
+    def insert(self, req: Request, slot: Optional[int] = None) -> int:
+        """Prefill ``req`` and install it in a free slot."""
+        free = self.free_slots()
+        assert free, "no free slot"
+        slot = free[0] if slot is None else slot
+        cache1 = model_lib.init_cache(
+            self.cfg, 1, self.ecfg.cache_len,
+            window=self.ecfg.window, dtype=self.ecfg.dtype,
+        )
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, cache1 = self._prefill_one(self.params, tokens, cache1)
+        first = int(jnp.argmax(logits[0]))
+
+        self.cache = _scatter_slot(self.cache, cache1, slot)
+        self.slot_req[slot] = req
+        self.slot_remaining[slot] = req.max_new_tokens
+        self.next_token[slot] = first
+        req.prefill_done = True
+        req.output.append(first)
+        return slot
+
+    # ------------------------------------------------------------------
+    def step(self) -> List[Request]:
+        """Decode one token for every live slot; return finished requests."""
+        if self.live == 0:
+            return []
+        tokens = jnp.asarray(self.next_token)
+        logits, self.cache = self._decode(self.params, tokens, self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.steps += 1
+
+        finished = []
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.next_token[i] = nxt[i]
+            req.output.append(int(nxt[i]))
+            self.slot_remaining[i] -= 1
+            if self.slot_remaining[i] <= 0:
+                req.finished = True
+                finished.append(req)
+                self.slot_req[i] = None
+        return finished

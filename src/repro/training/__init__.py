@@ -1,0 +1,2 @@
+from repro.training.optimizer import adamw_init, adamw_update, OptimizerConfig  # noqa: F401
+from repro.training.schedule import make_schedule, ScheduleConfig  # noqa: F401

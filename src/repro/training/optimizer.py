@@ -1,0 +1,85 @@
+"""Pure-JAX AdamW with global-norm clipping.
+
+``state_dtype=bfloat16`` halves optimizer memory (m, v in bf16) — used by the
+1T-parameter Kimi-K2 training config, where fp32 states would not fit the
+single-pod HBM budget (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: Any = jnp.float32
+
+
+def adamw_init(params, opt_cfg: OptimizerConfig):
+    zeros = lambda p: jnp.zeros(p.shape, dtype=opt_cfg.state_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params,
+    grads,
+    opt_state,
+    opt_cfg: OptimizerConfig,
+    lr: Optional[jax.Array] = None,
+) -> Tuple[Any, Any, dict]:
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = jnp.asarray(opt_cfg.lr if lr is None else lr, jnp.float32)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, opt_cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = opt_cfg.b1, opt_cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + opt_cfg.eps)
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (delta + opt_cfg.weight_decay * p32)
+        return (
+            new_p.astype(p.dtype),
+            m32.astype(opt_cfg.state_dtype),
+            v32.astype(opt_cfg.state_dtype),
+        )
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -1,0 +1,53 @@
+"""LR schedules — WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395),
+cosine, and linear."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "wsd"            # wsd | cosine | linear | constant
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    # WSD: decay starts at ``decay_start`` fraction of total (MiniCPM: ~0.9)
+    decay_start_frac: float = 0.9
+    min_lr_frac: float = 0.1
+
+
+def make_schedule(cfg: ScheduleConfig):
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.kind == "constant":
+            frac = 1.0
+        elif cfg.kind == "linear":
+            frac = 1.0 - jnp.clip(
+                (s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+                0.0, 1.0,
+            ) * (1.0 - cfg.min_lr_frac)
+        elif cfg.kind == "cosine":
+            prog = jnp.clip(
+                (s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+                0.0, 1.0,
+            )
+            frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * prog)
+            )
+        elif cfg.kind == "wsd":
+            decay_start = cfg.decay_start_frac * cfg.total_steps
+            # stable at 1.0 until decay_start, then exponential-ish decay to min
+            prog = jnp.clip(
+                (s - decay_start) / max(cfg.total_steps - decay_start, 1), 0.0, 1.0
+            )
+            frac = jnp.where(
+                s < decay_start, 1.0, cfg.min_lr_frac ** prog
+            )
+        else:
+            raise ValueError(cfg.kind)
+        return cfg.peak_lr * warm * frac
+
+    return sched

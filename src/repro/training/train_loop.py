@@ -1,0 +1,83 @@
+"""Training step + loop."""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ModelConfig
+from repro.models import model as model_lib
+from repro.training.optimizer import OptimizerConfig, adamw_init, adamw_update
+from repro.training.schedule import ScheduleConfig, make_schedule
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    schedule: ScheduleConfig = ScheduleConfig()
+    window: int = 0                  # sliding-window attention (0 = full)
+    moe_path: str = "local"          # local | ep_a2a | dense
+    remat: object = True      # False | True | 'dots'
+    aux_weight: float = 0.01
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Pure function of its arguments — safe to jit/lower with ShapeDtypeStructs.
+    """
+    sched = make_schedule(tcfg.schedule)
+
+    def train_step(params, opt_state, batch):
+        def loss_of(p):
+            return model_lib.loss_fn(
+                cfg, p, batch,
+                window=tcfg.window, moe_path=tcfg.moe_path,
+                remat=tcfg.remat, aux_weight=tcfg.aux_weight,
+            )
+
+        (loss, parts), grads = jax.value_and_grad(loss_of, has_aux=True)(params)
+        lr = sched(opt_state["step"])
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, tcfg.optimizer, lr=lr
+        )
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    data_iter,
+    num_steps: int,
+    *,
+    seed: int = 0,
+    param_dtype=jnp.float32,
+    log_every: int = 10,
+    callback: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+):
+    """Single-host training loop (CPU-runnable on reduced configs)."""
+    key = jax.random.key(seed)
+    params = model_lib.init_params(cfg, key, dtype=param_dtype)
+    opt_state = adamw_init(params, tcfg.optimizer)
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(num_steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(step, m)
+    return params, opt_state, history

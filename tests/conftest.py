@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single host CPU device (the dry-run, and ONLY the
+# dry-run, forces 512 placeholder devices — never set that here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,96 @@
+"""The assigned architectures: exact hyper-parameters + reduced variants."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_architectures
+
+# (arch, layers, d_model, heads, kv_heads, d_ff, vocab) from the assignment
+ASSIGNED = {
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "rwkv6-1.6b": (24, 2048, None, None, 7168, 65536),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+    "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+    "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+}
+
+
+def test_all_assigned_present():
+    assert set(list_architectures()) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_exact_hyperparams(arch):
+    L, d, h, kv, ff, v = ASSIGNED[arch]
+    cfg = get_config(arch)
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    if h is not None:
+        assert cfg.num_heads == h
+        assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source, f"{arch} missing citation"
+    assert 0 < cfg.quality < 1
+
+
+def test_moe_configs():
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert (phi.num_experts, phi.num_experts_per_tok) == (16, 2)
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert (kimi.num_experts, kimi.num_experts_per_tok) == (384, 8)
+    # active params must be well under total
+    assert kimi.params_active < 0.08 * kimi.params_total
+    assert 0.9e12 < kimi.params_total < 1.3e12, "kimi should be ~1T total"
+    assert 25e9 < kimi.params_active < 40e9, "kimi ~32B active"
+
+
+def test_param_scale_sanity():
+    for arch, lo, hi in [
+        ("llama3-8b", 7e9, 9e9),
+        ("qwen2-72b", 65e9, 80e9),
+        ("qwen1.5-0.5b", 0.4e9, 0.8e9),
+        ("rwkv6-1.6b", 1.2e9, 2.2e9),
+        ("minicpm-2b", 2.0e9, 3.3e9),
+    ]:
+        total = get_config(arch).params_total
+        assert lo < total < hi, (arch, total)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= 4
+    assert r.d_model <= 512
+    assert (r.num_experts or 0) <= 4
+    assert r.vocab_size <= 1024
+    # family preserved
+    assert r.family == get_config(arch).family
+    assert r.block_pattern == get_config(arch).block_pattern
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+def test_layer_kinds_cover_all_layers():
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        kinds = cfg.layer_kinds()
+        assert len(kinds) == cfg.num_layers
+
+
+def test_recurrentgemma_pattern():
+    cfg = get_config("recurrentgemma-9b")
+    kinds = cfg.layer_kinds()
+    assert kinds.count("local") == 12          # 1 local-attn per 3 layers
+    assert kinds.count("rglru") == 26

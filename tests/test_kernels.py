@@ -1,0 +1,196 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rwkv6_scan import rwkv6_chunked
+
+KEY = jax.random.key(0)
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+FA_CASES = [
+    # b, sq, sk, nq, nkv, hd, causal, window, bq, bk
+    (2, 64, 64, 4, 2, 32, True, 0, 32, 32),
+    (1, 128, 128, 8, 8, 64, True, 16, 32, 64),
+    (2, 48, 48, 4, 1, 32, True, 0, 16, 16),       # ragged + MQA
+    (1, 64, 64, 2, 2, 16, False, 0, 32, 32),       # encoder (non-causal)
+    (1, 96, 96, 6, 3, 64, True, 32, 32, 32),       # window + GQA
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(case, dtype):
+    b, sq, sk, nq, nkv, hd, causal, window, bq, bk = case
+    ks = jax.random.split(jax.random.fold_in(KEY, hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, sq, nq, hd), dtype)
+    k = jax.random.normal(ks[1], (b, sk, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, sk, nkv, hd), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, block_q=bq, block_k=bk,
+        interpret=True,
+    )
+    expected = ref.mha_reference(q, k, v, causal=causal, window=window)
+    assert out.shape == expected.shape and out.dtype == dtype
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - expected.astype(jnp.float32))))
+    assert err < _tol(dtype), (case, dtype, err)
+
+
+def test_flash_attention_q_offset():
+    """Chunked prefill: q block at absolute offset vs full causal."""
+    b, s, nq, hd = 1, 64, 4, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, nq, hd))
+    k = jax.random.normal(ks[1], (b, s, nq, hd))
+    v = jax.random.normal(ks[2], (b, s, nq, hd))
+    full = ref.mha_reference(q, k, v, causal=True)
+    out = flash_attention(
+        q[:, 32:], k, v, causal=True, q_offset=32, block_q=16, block_k=16,
+        interpret=True,
+    )
+    err = float(jnp.max(jnp.abs(out - full[:, 32:])))
+    assert err < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+DA_CASES = [
+    (2, 64, 4, 2, 32, 32),
+    (1, 100, 8, 1, 64, 32),    # ragged cache + MQA
+    (3, 48, 2, 2, 16, 16),
+    (1, 256, 16, 4, 64, 128),  # long cache, big block
+]
+
+
+@pytest.mark.parametrize("case", DA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(case, dtype):
+    b, s, nq, nkv, hd, bk = case
+    ks = jax.random.split(jax.random.fold_in(KEY, hash(case) % 2**31), 4)
+    q = jax.random.normal(ks[0], (b, nq, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, nkv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, nkv, hd), dtype)
+    valid = jax.random.uniform(ks[3], (b, s)) < 0.7
+    valid = valid.at[:, 0].set(True)              # at least one visible slot
+    out = decode_attention(q, k, v, valid, block_k=bk, interpret=True)
+    expected = ref.decode_attention_reference(q, k, v, valid)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - expected.astype(jnp.float32))))
+    assert err < _tol(dtype), (case, dtype, err)
+
+
+def test_decode_attention_single_valid_slot():
+    """Softmax over one visible slot == plain value read."""
+    b, s, nq, hd = 1, 32, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, nq, hd))
+    k = jax.random.normal(ks[1], (b, s, nq, hd))
+    v = jax.random.normal(ks[2], (b, s, nq, hd))
+    valid = jnp.zeros((b, s), bool).at[:, 5].set(True)
+    out = decode_attention(q, k, v, valid, block_k=8, interpret=True)
+    assert float(jnp.max(jnp.abs(out - v[:, 5]))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 chunked scan
+# ---------------------------------------------------------------------------
+RWKV_CASES = [
+    # b, t, h, hd, chunk, with_state
+    (2, 64, 2, 32, 16, False),
+    (1, 50, 4, 64, 32, True),     # ragged tail (t % chunk != 0)
+    (2, 33, 1, 16, 8, True),
+    (1, 128, 2, 64, 32, True),
+]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_chunked(case, dtype):
+    b, t, h, hd, chunk, with_state = case
+    ks = jax.random.split(jax.random.fold_in(KEY, hash(case) % 2**31), 6)
+    r = (jax.random.normal(ks[0], (b, t, h, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, t, h, hd)) * 0.5).astype(dtype)
+    v = jax.random.normal(ks[2], (b, t, h, hd)).astype(dtype)
+    w = (jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, hd)) * 2 - 1)
+         * 0.5 + 0.45).astype(dtype)
+    u = (jax.random.normal(ks[4], (h, hd)) * 0.3).astype(dtype)
+    s0 = (
+        (jax.random.normal(ks[5], (b, h, hd, hd)) * 0.2).astype(jnp.float32)
+        if with_state else None
+    )
+    out, sT = rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    exp_o, exp_s = ref.rwkv6_reference(r, k, v, w, u, s0)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    e1 = float(jnp.max(jnp.abs(out.astype(jnp.float32) - exp_o.astype(jnp.float32))))
+    e2 = float(jnp.max(jnp.abs(sT - exp_s)))
+    assert e1 < tol and e2 < tol, (case, dtype, e1, e2)
+
+
+def test_rwkv6_strong_decay_stability():
+    """Data-dependent decay near the clip floor must not overflow (the
+    reason the kernel keeps decay ratios inside the hd reduction)."""
+    b, t, h, hd = 1, 64, 1, 16
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (b, t, h, hd)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, hd)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, hd))
+    # w down to exp(-exp(4)) ~ 1e-24: brutal decay
+    w = jnp.exp(-jnp.exp(jax.random.uniform(ks[3], (b, t, h, hd), minval=-2.0, maxval=4.0)))
+    u = jax.random.normal(ks[4], (h, hd)) * 0.3
+    out, sT = rwkv6_chunked(r, k, v, w, u, None, chunk=16, interpret=True)
+    exp_o, exp_s = ref.rwkv6_reference(r, k, v, w, u, None)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(jnp.max(jnp.abs(out - exp_o))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# rglru (associative-scan path in ops)
+# ---------------------------------------------------------------------------
+def test_rglru_assoc_matches_sequential():
+    from repro.kernels import ops
+
+    b, t, d = 2, 37, 24
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (b, t, d))
+    a = jax.nn.sigmoid(jax.random.normal(ks[1], (b, t, d)))
+    h0 = jax.random.normal(ks[2], (b, d))
+    got, gT = ops.rglru(x, a, h0)
+    exp, eT = ref.rglru_reference(x, a, h0)
+    assert float(jnp.max(jnp.abs(got - exp))) < 1e-5
+    assert float(jnp.max(jnp.abs(gT - eT))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Blocked sliding-window attention (XLA §Perf path) — property test.
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@given(
+    s=st.integers(20, 120),
+    window=st.sampled_from([4, 8, 16]),
+    nq=st.sampled_from([2, 4]),
+    group=st.sampled_from([1, 2]),
+)
+@settings(max_examples=12, deadline=None)
+def test_blocked_window_equals_masked_oracle(s, window, nq, group):
+    nkv = max(1, nq // group)
+    hd = 16
+    key = jax.random.fold_in(KEY, s * 131 + window * 7 + nq)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, s, nq, hd))
+    k = jax.random.normal(ks[1], (1, s, nkv, hd))
+    v = jax.random.normal(ks[2], (1, s, nkv, hd))
+    got = ref.local_attention_blocked(q, k, v, window=window)
+    exp = ref.mha_reference(q, k, v, causal=True, window=window)
+    assert float(jnp.max(jnp.abs(got - exp))) < 1e-5

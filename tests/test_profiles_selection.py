@@ -1,0 +1,131 @@
+"""Profile table + model selection: invariants and paper properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import list_architectures
+from repro.core.model_selection import (
+    Constraint,
+    NoFeasibleModel,
+    feasible_set,
+    select_naive,
+    select_paragon,
+)
+from repro.core.profiles import (
+    STANDARD,
+    ModelProfile,
+    RequestClass,
+    get_profile,
+    iso_accuracy_set,
+    iso_latency_set,
+    model_pool,
+)
+from repro.configs import get_config
+
+
+# ---------------------------------------------------------------------------
+# Profile physics.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", list_architectures())
+def test_more_chips_never_slower(arch):
+    cfg = get_config(arch)
+    base = ModelProfile(cfg, ModelProfile(cfg, 1).min_chips)
+    bigger = ModelProfile(cfg, base.chips * 2)
+    assert bigger.decode_step_latency(8) <= base.decode_step_latency(8) * 1.05
+    assert bigger.prefill_latency(512) <= base.prefill_latency(512) * 1.05
+
+
+@pytest.mark.parametrize("arch", list_architectures())
+def test_bigger_batch_never_faster_per_step(arch):
+    prof = get_profile(arch)
+    assert prof.decode_step_latency(16) >= prof.decode_step_latency(1) - 1e-12
+
+
+def test_fig8_knee_exists():
+    """The serverless memory knob (Fig 8): latency falls with slice size
+    but with diminishing returns; cost per request rises past the knee."""
+    prof1 = get_profile("llama3-8b")
+    lats, costs = [], []
+    for mult in (1, 2, 4, 8):
+        p = ModelProfile(prof1.cfg, prof1.chips * mult)
+        lats.append(p.request_latency(STANDARD, 1))
+        costs.append(p.chips * p.request_latency(STANDARD, 1))
+    assert all(a >= b - 1e-9 for a, b in zip(lats, lats[1:])), "latency must fall"
+    # diminishing returns: first doubling helps more than the last
+    gain_first = lats[0] / lats[1]
+    gain_last = lats[2] / lats[3]
+    assert gain_first >= gain_last - 1e-9
+    # chip-seconds per request (the billable quantity) grows past the knee
+    assert costs[-1] > costs[0]
+
+
+def test_min_chips_fit_hbm():
+    for arch in list_architectures():
+        prof = get_profile(arch)
+        assert prof.weight_bytes * 1.05 < prof.chips * prof.chip.hbm_bytes
+
+
+def test_attention_free_has_constant_state():
+    rwkv = get_profile("rwkv6-1.6b")
+    assert rwkv.state_bytes(1_000) == rwkv.state_bytes(500_000)
+    llama = get_profile("llama3-8b")
+    assert llama.state_bytes(2_000) > llama.state_bytes(1_000)
+
+
+def test_pool_complete_and_positive():
+    pool = model_pool()
+    assert set(pool) == set(list_architectures())
+    for a, e in pool.items():
+        assert e["latency_s"] > 0
+        assert e["throughput_rps"] > 0, a
+        assert e["cost_per_1k"] > 0
+        assert e["burst_cost_per_req"] > e["cost_per_1k"] / 1000.0, (
+            f"{a}: burst must cost more per request than reserved")
+
+
+def test_iso_sets():
+    pool = model_pool()
+    iso_lat = iso_latency_set(0.5)
+    assert all(e["latency_s"] <= 0.5 for e in iso_lat.values())
+    iso_acc = iso_accuracy_set(0.6)
+    assert all(e["accuracy"] >= 0.6 for e in iso_acc.values())
+    assert 0 < len(iso_lat) < len(pool)
+    assert 0 < len(iso_acc) < len(pool)
+
+
+# ---------------------------------------------------------------------------
+# Selection properties.
+# ---------------------------------------------------------------------------
+@given(
+    acc=st.floats(0.0, 0.9),
+    lat=st.floats(0.05, 3.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_paragon_never_costlier_than_naive(acc, lat):
+    c = Constraint(min_accuracy=acc, max_latency_s=lat)
+    pool = model_pool()
+    try:
+        n = select_naive(c)
+    except NoFeasibleModel:
+        return
+    try:
+        p = select_paragon(c)
+    except NoFeasibleModel:
+        return
+    assert pool[p]["cost_per_1k"] <= pool[n]["cost_per_1k"] + 1e-12
+
+
+@given(acc=st.floats(0.0, 0.87), lat=st.floats(0.05, 3.0))
+@settings(max_examples=100, deadline=None)
+def test_paragon_meets_both_constraints(acc, lat):
+    c = Constraint(min_accuracy=acc, max_latency_s=lat)
+    if not feasible_set(c):
+        return
+    pool = model_pool()
+    p = select_paragon(c)
+    assert pool[p]["accuracy"] >= acc
+    assert pool[p]["latency_s"] <= lat
+
+
+def test_selection_raises_when_infeasible():
+    with pytest.raises(NoFeasibleModel):
+        select_paragon(Constraint(min_accuracy=0.99, max_latency_s=0.01))

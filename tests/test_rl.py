@@ -1,0 +1,96 @@
+"""RL controller: env contract + PPO machinery (fast versions)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.rl.env import HEADROOMS, N_ACTIONS, OBS_DIM, OFFLOADS, EnvConfig, ServingEnv
+from repro.core.rl.ppo import (
+    PPOConfig,
+    compute_gae,
+    evaluate_policy,
+    init_net,
+    policy_logits_value,
+    train_ppo,
+)
+from repro.core.traces import get_trace
+
+
+@pytest.fixture(scope="module")
+def env():
+    trace = get_trace("twitter", 300, mean_rps=40)
+    return ServingEnv(EnvConfig(arch="qwen1.5-0.5b", mean_rps=40), trace)
+
+
+def test_env_contract(env):
+    obs = env.reset()
+    assert obs.shape == (OBS_DIM,)
+    total = 0.0
+    for t in range(50):
+        obs, r, done, metrics = env.step(t % N_ACTIONS)
+        assert obs.shape == (OBS_DIM,)
+        assert np.isfinite(r) and r <= 0.0
+        assert metrics["cost"] >= 0.0
+        assert not done
+        total += r
+    assert total < 0.0
+
+
+def test_env_offload_action_buys_slo(env):
+    """Forcing blind offload must not violate more than never offloading."""
+    def run(action):
+        e = ServingEnv(env.cfg, env.base_trace)
+        e.reset()
+        done = False
+        while not done:
+            _, _, done, _ = e.step(action)
+        return e.episode_result()
+
+    a_none = HEADROOMS.index(1.0) * len(OFFLOADS) + OFFLOADS.index("none")
+    a_blind = HEADROOMS.index(1.0) * len(OFFLOADS) + OFFLOADS.index("blind")
+    r_none, r_blind = run(a_none), run(a_blind)
+    assert r_blind.violation_rate <= r_none.violation_rate
+    assert r_blind.cost_total >= r_none.cost_total  # premium is not free
+
+
+def test_gae_simple_case():
+    rewards = np.array([1.0, 1.0, 1.0], np.float32)
+    values = np.zeros(3, np.float32)
+    dones = np.zeros(3, np.float32)
+    adv, ret = compute_gae(rewards, values, dones, last_value=0.0,
+                           gamma=1.0, lam=1.0)
+    # undiscounted full-lambda GAE == reward-to-go
+    assert np.allclose(ret, [3.0, 2.0, 1.0])
+
+
+def test_gae_done_boundary():
+    rewards = np.array([1.0, 1.0], np.float32)
+    values = np.zeros(2, np.float32)
+    dones = np.array([1.0, 0.0], np.float32)    # episode ends after step 0
+    adv, ret = compute_gae(rewards, values, dones, last_value=5.0,
+                           gamma=0.9, lam=1.0)
+    assert ret[0] == pytest.approx(1.0)          # no bootstrap across done
+    assert ret[1] == pytest.approx(1.0 + 0.9 * 5.0)
+
+
+def test_net_shapes():
+    params = init_net(jax.random.key(0), PPOConfig(hidden=16))
+    logits, value = policy_logits_value(params, jnp.zeros((OBS_DIM,)))
+    assert logits.shape == (N_ACTIONS,)
+    assert value.shape == ()
+    logits_b, value_b = policy_logits_value(params, jnp.zeros((5, OBS_DIM)))
+    assert logits_b.shape == (5, N_ACTIONS)
+    assert value_b.shape == (5,)
+
+
+def test_ppo_short_training_improves(env):
+    """A few PPO iterations must improve on the untrained policy."""
+    cfg = PPOConfig(iterations=8, rollout_len=300, hidden=32, seed=1)
+    state = train_ppo(env, cfg)
+    assert len(state.history) == 8
+    assert np.isfinite(state.best_reward)
+    first = state.history[0]["rollout_reward"]
+    assert state.best_reward >= first
+    res = evaluate_policy(ServingEnv(env.cfg, env.base_trace), state.params, seed=3)
+    assert res.total_requests > 0
+    assert res.violation_rate < 0.5

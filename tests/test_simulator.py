@@ -1,0 +1,212 @@
+"""Simulator + scheduler invariants (unit + hypothesis property tests)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hardware import PRICING
+from repro.core.simulator import (
+    Action,
+    ArchLoad,
+    ServingSim,
+    _Queue,
+    simulate,
+    uniform_pool_workload,
+)
+from repro.core.schedulers import SCHEDULERS
+from repro.core.traces import get_trace
+
+# low per-instance throughput -> flash crowds actually produce shortfalls
+SMALL_ARCHS = ["llama3-8b", "minicpm-2b"]
+
+
+# ---------------------------------------------------------------------------
+# _Queue properties.
+# ---------------------------------------------------------------------------
+@given(
+    pushes=st.lists(
+        st.tuples(st.integers(0, 50), st.floats(0.0, 100.0)), max_size=30
+    ),
+    amount=st.floats(0.0, 2000.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_queue_pop_conserves_mass(pushes, amount):
+    q = _Queue()
+    total = 0.0
+    for tick, count in sorted(pushes):
+        q.push(tick, count)
+        total += count if count > 0 else 0.0
+    popped = q.pop(amount)
+    popped_mass = sum(c for _, c in popped)
+    assert popped_mass <= min(amount, total) + 1e-6
+    assert abs(popped_mass + q.total - total) < 1e-6
+
+
+@given(
+    pushes=st.lists(
+        st.tuples(st.integers(0, 50), st.floats(0.1, 10.0)),
+        min_size=1, max_size=20,
+    )
+)
+@settings(max_examples=200, deadline=None)
+def test_queue_fifo_order(pushes):
+    q = _Queue()
+    for tick, count in sorted(pushes):
+        q.push(tick, count)
+    out = q.pop(1e9)
+    ticks = [t for t, _ in out]
+    assert ticks == sorted(ticks)
+
+
+@given(
+    now=st.integers(10, 100),
+    max_age=st.integers(0, 20),
+    pushes=st.lists(st.tuples(st.integers(0, 100), st.floats(0.1, 5.0)), max_size=20),
+)
+@settings(max_examples=200, deadline=None)
+def test_queue_pop_older_than(now, max_age, pushes):
+    q = _Queue()
+    expected_old = 0.0
+    for tick, count in sorted(pushes):
+        q.push(tick, count)
+        if now - tick > max_age:
+            expected_old += count
+    got = q.pop_older_than(now, max_age)
+    assert abs(got - expected_old) < 1e-6
+    # everything remaining is young enough
+    for t0, _ in q.buckets:
+        assert now - t0 <= max_age
+
+
+# ---------------------------------------------------------------------------
+# Conservation + determinism.
+# ---------------------------------------------------------------------------
+def _run(policy_name, trace_name="berkeley", secs=400, rps=60):
+    trace = get_trace(trace_name, secs, mean_rps=rps)
+    wl = uniform_pool_workload(SMALL_ARCHS, strict_frac=0.25)
+    return simulate(trace, wl, SCHEDULERS[policy_name]())
+
+
+@pytest.mark.parametrize("policy", sorted(SCHEDULERS))
+def test_request_conservation(policy):
+    res = _run(policy)
+    queued_tail = res.total_requests - res.served_vm - res.served_burst
+    assert queued_tail >= -1e-6, "served more than arrived"
+    # whatever remains queued at the horizon is bounded by the abandon
+    # window (3 x the relaxed SLO) of arrivals
+    assert queued_tail <= 3 * 20.0 * 60 + 1e-6
+
+
+@pytest.mark.parametrize("policy", sorted(SCHEDULERS))
+def test_violations_bounded(policy):
+    res = _run(policy)
+    assert 0.0 <= res.violation_rate <= 1.0
+    assert res.cost_total >= 0.0
+
+
+def test_determinism():
+    a = _run("paragon").summary()
+    b = _run("paragon").summary()
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# The paper's structural claims, in miniature.
+# ---------------------------------------------------------------------------
+def test_overprovisioners_cost_more_than_reactive():
+    base = _run("reactive")
+    for name in ("util_aware", "exascale"):
+        r = _run(name)
+        assert r.cost_total >= base.cost_total * 0.99, name
+        assert r.violation_rate <= base.violation_rate + 1e-9, name
+
+
+def test_mixed_kills_violations_with_burst():
+    base = _run("reactive")
+    mixed = _run("mixed")
+    assert mixed.violation_rate < base.violation_rate * 0.5
+    assert mixed.served_burst > 0
+    assert mixed.cost_burst > 0
+
+
+def test_paragon_cheaper_than_mixed():
+    mixed = _run("mixed")
+    paragon = _run("paragon")
+    assert paragon.cost_total <= mixed.cost_total
+    # paragon never pays the burst premium for relaxed traffic
+    assert paragon.cost_burst <= mixed.cost_burst
+
+
+def test_flat_trace_needs_no_burst():
+    """Observation 4: on the wiki-like trace, offload volume ~ 0."""
+    trace = get_trace("wiki", 400, mean_rps=60)
+    wl = uniform_pool_workload(SMALL_ARCHS, strict_frac=0.25)
+    mixed = simulate(trace, wl, SCHEDULERS["mixed"]())
+    assert mixed.served_burst < 0.02 * mixed.total_requests
+
+
+def test_provisioning_latency_causes_reactive_violations():
+    """With instant provisioning, reactive violations collapse."""
+    fast = dataclasses.replace(PRICING, reserved_provision_s=1.0)
+    trace = get_trace("berkeley", 400, mean_rps=60)
+    wl = uniform_pool_workload(SMALL_ARCHS, strict_frac=0.25)
+    slow_res = simulate(trace, wl, SCHEDULERS["reactive"]())
+    fast_res = simulate(trace, wl, SCHEDULERS["reactive"](), pricing=fast)
+    assert fast_res.violation_rate < slow_res.violation_rate
+
+
+# ---------------------------------------------------------------------------
+# Stepwise API.
+# ---------------------------------------------------------------------------
+def test_stepwise_equals_closed_loop():
+    trace = get_trace("berkeley", 200, mean_rps=40)
+    wl = [ArchLoad("qwen1.5-0.5b", 1.0, 0.25)]
+    policy = SCHEDULERS["paragon"]()
+    closed = simulate(trace, wl, policy)
+
+    sim = ServingSim(trace, wl)
+    policy2 = SCHEDULERS["paragon"]()
+    while not sim.done:
+        obs = sim.observe()
+        sim.apply(policy2(sim.tick, obs))
+    assert sim.res.summary() == closed.summary()
+
+
+def test_apply_returns_marginal_metrics():
+    trace = get_trace("wiki", 50, mean_rps=40)
+    sim = ServingSim(trace, [ArchLoad("qwen1.5-0.5b", 1.0, 0.5)])
+    total_cost = 0.0
+    while not sim.done:
+        sim.observe()
+        m = sim.apply({"qwen1.5-0.5b": Action(target=1)})
+        assert m["cost"] >= 0.0
+        total_cost += m["cost"]
+    assert abs(total_cost - sim.res.cost_total) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Spot tier (beyond-paper, paper §VI future work).
+# ---------------------------------------------------------------------------
+def test_spot_policy_cheaper_at_fleet_scale():
+    trace = get_trace("wiki", 1200, mean_rps=400)
+    wl = [ArchLoad("llama3-8b", 0.6, 0.25), ArchLoad("minicpm-2b", 0.4, 0.25)]
+    paragon = simulate(trace, wl, SCHEDULERS["paragon"]())
+    spot = simulate(trace, wl, SCHEDULERS["spot_paragon"]())
+    assert spot.cost_total < 0.75 * paragon.cost_total
+    assert spot.cost_spot > 0
+    assert spot.violations_strict == 0          # the on-demand floor holds
+    assert spot.preemptions > 0                  # risk actually exercised
+
+
+def test_spot_preemption_determinism():
+    trace = get_trace("wiki", 600, mean_rps=300)
+    wl = [ArchLoad("llama3-8b", 1.0, 0.25)]
+    a = simulate(trace, wl, SCHEDULERS["spot_paragon"]()).summary()
+    b = simulate(trace, wl, SCHEDULERS["spot_paragon"]()).summary()
+    assert a == b
+
+
+def test_spot_unused_by_default_policies():
+    res = _run("paragon")
+    assert res.cost_spot == 0.0 and res.preemptions == 0

@@ -1,0 +1,139 @@
+"""End-to-end behaviour: the paper's headline claims, in miniature.
+
+Full-scale validations live in benchmarks/ (one per paper figure); these
+run the same pipelines at reduced scale so the whole claim chain is
+covered by ``pytest`` alone.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Constraint,
+    get_trace,
+    model_pool,
+    selection_cost,
+    simulate,
+    uniform_pool_workload,
+)
+from repro.core.hardware import PRICING
+from repro.core.schedulers import SCHEDULERS
+
+POOL = ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b",
+        "whisper-small", "recurrentgemma-9b"]
+PREMIUM = dataclasses.replace(PRICING, burst_premium=8.0)
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for tr in ("berkeley", "wiki"):
+        trace = get_trace(tr, 1800, mean_rps=300)
+        wl = uniform_pool_workload(POOL, strict_frac=0.25)
+        out[tr] = {
+            n: simulate(trace, wl, cls(), pricing=PREMIUM)
+            for n, cls in SCHEDULERS.items()
+        }
+    return out
+
+
+def test_fig4_vm_cheaper_at_constant_load():
+    """Fig 4: at constant arrival rates that keep slices utilized (the
+    paper's regime — its CNN VMs served ~10 req/s each), reserved slices
+    always beat burst.  Our LLM slices serve 10-400 req/s, so 'constant
+    load' scales with per-slice throughput."""
+    pool = model_pool()
+    for mult in (1.0, 2.0, 4.0):
+        for arch, e in pool.items():
+            rate = mult * e["throughput_rps"]
+            n_slices = np.ceil(rate / e["throughput_rps"])
+            vm_hourly = n_slices * e["chips"] * PRICING.reserved_chip_hour
+            burst_hourly = rate * 3600 * e["burst_cost_per_req"]
+            assert vm_hourly < burst_hourly, (arch, mult)
+
+
+def test_fig4_crossover_at_tiny_load():
+    """Beyond-paper corollary: at deep under-utilization the per-request
+    burst pool is cheaper — the crossover the paper's CNN-scale VMs never
+    see (EXPERIMENTS.md discusses this delta)."""
+    e = model_pool()["rwkv6-1.6b"]
+    rate = 0.02 * e["throughput_rps"]
+    vm_hourly = e["chips"] * PRICING.reserved_chip_hour
+    burst_hourly = rate * 3600 * e["burst_cost_per_req"]
+    assert burst_hourly < vm_hourly
+
+
+def test_fig5_overprovisioning_band(results):
+    """Fig 5: util_aware / exascale hold 15-50% more capacity on the
+    dynamic trace (paper: 20-30%)."""
+    r = results["berkeley"]
+    for name in ("util_aware", "exascale"):
+        ratio = r[name].chip_seconds / r["reactive"].chip_seconds
+        assert 1.10 < ratio < 1.65, (name, ratio)
+
+
+def test_fig6_mixed_cost_and_slo(results):
+    """Fig 6: mixed ~ reactive cost, violations cut by >= 60%."""
+    r = results["berkeley"]
+    cost_ratio = r["mixed"].cost_total / r["reactive"].cost_total
+    assert cost_ratio < 1.30
+    # and mixed is cheaper than holding spare VMs (util_aware/exascale)
+    assert r["mixed"].cost_total < r["util_aware"].cost_total
+    assert r["mixed"].violation_rate < 0.4 * r["reactive"].violation_rate
+
+
+def test_fig6_wiki_mixed_no_benefit(results):
+    """Observation 4: flat trace -> mixed burns almost no burst."""
+    r = results["wiki"]
+    assert r["mixed"].served_burst < 0.02 * r["mixed"].total_requests
+
+
+def test_fig9a_paragon_cheaper_than_mixed_same_slo(results):
+    """Fig 9a/b: Paragon >= ~5% cheaper than mixed, SLO far below reactive."""
+    for tr in ("berkeley",):
+        r = results[tr]
+        saving = 1 - r["paragon"].cost_total / r["mixed"].cost_total
+        assert saving > 0.04, (tr, saving)
+        assert r["paragon"].violation_rate < 0.5 * r["reactive"].violation_rate
+
+
+def test_fig9c_paragon_selection_cheaper_than_naive():
+    """Fig 9c: constraint-aware selection >= 20% cheaper than naive."""
+    rng = np.random.default_rng(0)
+    cons = [
+        Constraint(float(rng.uniform(0.3, 0.85)), float(rng.uniform(0.3, 2.0)))
+        for _ in range(100)
+    ]
+    n = selection_cost(cons, "naive")
+    p = selection_cost(cons, "paragon")
+    assert p["cost"] < 0.8 * n["cost"]
+    # and paragon still delivers the requested accuracy on average
+    assert p["mean_accuracy"] >= 0.55
+
+
+def test_fig9c_dynamic_fleet_routing():
+    """Workload-2 as a dynamic simulation: routing the constraint stream
+    through Paragon selection yields a cheaper FLEET than naive routing,
+    in the paper's 'up to 20%' band.
+
+    Scale matters: at low rates the per-arch instance floor quantizes the
+    saving away (spreading over 6 archs pays 6 idle floors while naive's
+    single big slice is fully amortized) — so this runs at the benchmark's
+    fleet scale (400 req/s, 1 h)."""
+    from repro.core.model_selection import selection_workload
+
+    rng = np.random.default_rng(0)
+    cons = [
+        Constraint(float(rng.uniform(0.3, 0.85)), float(rng.uniform(0.3, 2.0)))
+        for _ in range(500)
+    ]
+    trace = get_trace("berkeley", 3600, mean_rps=400)
+    costs = {}
+    for sel in ("naive", "paragon"):
+        wl, skipped = selection_workload(cons, sel)
+        assert skipped == 0
+        costs[sel] = simulate(trace, wl, SCHEDULERS["paragon"](),
+                              pricing=PREMIUM).cost_total
+    saving = 1 - costs["paragon"] / costs["naive"]
+    assert 0.08 <= saving <= 0.35, saving

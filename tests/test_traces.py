@@ -1,0 +1,37 @@
+"""Trace twins: Fig-7 regimes, normalization, determinism."""
+import numpy as np
+import pytest
+
+from repro.core.traces import TRACES, get_trace, peak_to_median, trace_stats
+
+
+@pytest.mark.parametrize("name", sorted(TRACES))
+def test_mean_normalized(name):
+    r = get_trace(name, 3600, mean_rps=123.0)
+    assert abs(r.mean() - 123.0) < 1e-6
+    assert (r >= 0).all()
+
+
+@pytest.mark.parametrize("name", sorted(TRACES))
+def test_deterministic(name):
+    a = get_trace(name, 600, seed=3)
+    b = get_trace(name, 600, seed=3)
+    assert np.array_equal(a, b)
+    c = get_trace(name, 600, seed=4)
+    assert not np.array_equal(a, c)
+
+
+def test_fig7_regimes():
+    """Wiki ~1.3-1.5 (mixed will not pay off); others clearly > 2."""
+    stats = trace_stats()
+    assert stats["wiki"]["peak_to_median"] < 1.6
+    for name in ("berkeley", "wits", "twitter"):
+        assert stats[name]["peak_to_median"] > 2.0, name
+
+
+def test_peak_to_median_function():
+    flat = np.ones(100)
+    assert peak_to_median(flat) == pytest.approx(1.0)
+    spiky = np.ones(100)
+    spiky[:2] = 100.0
+    assert peak_to_median(spiky) > 2.0

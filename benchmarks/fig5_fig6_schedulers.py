@@ -21,7 +21,7 @@ from benchmarks.common import (
     write_artifact,
 )
 from repro.core.schedulers import SCHEDULERS
-from repro.core.simulator import simulate, uniform_pool_workload
+from repro.core.sim import simulate, uniform_pool_workload
 from repro.core.traces import TRACES, get_trace
 
 

@@ -30,7 +30,7 @@ from repro.core.model_selection import (
     selection_workload,
 )
 from repro.core.schedulers import SCHEDULERS
-from repro.core.simulator import simulate, uniform_pool_workload
+from repro.core.sim import simulate, uniform_pool_workload
 from repro.core.traces import get_trace
 
 

@@ -12,7 +12,7 @@ from benchmarks.common import Row, print_rows, write_artifact
 from repro.core.rl.env import EnvConfig, ServingEnv
 from repro.core.rl.ppo import PPOConfig, evaluate_policy, train_ppo
 from repro.core.schedulers import SCHEDULERS
-from repro.core.simulator import ArchLoad, simulate
+from repro.core.sim import ArchLoad, simulate
 from repro.core.traces import get_trace
 
 PENALTY = 0.02

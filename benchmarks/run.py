@@ -21,6 +21,7 @@ from benchmarks import (
     fig9_paragon,
     rl_vs_schemes,
     roofline,
+    sim_throughput,
     spot_tier,
 )
 
@@ -34,6 +35,7 @@ BENCHES = {
     "rl": rl_vs_schemes.run,
     "spot": spot_tier.run,
     "roofline": roofline.run,
+    "sim_throughput": sim_throughput.run,
 }
 
 

@@ -1,0 +1,86 @@
+"""BENCH: simulation-engine throughput (ticks/sec) vs the seed loop.
+
+Pool sizes 4/16/64 over a full 86 400-tick (24 h) berkeley trace with the
+vectorized engine, against the seed per-arch Python loop (kept as
+``repro.core.sim.reference``) measured on a shorter slice of the same
+trace and reported as ticks/sec.  Tracks the perf trajectory of the
+engine from PR 1 onward; artifact: ``BENCH_sim_throughput.json``.
+
+Claim: a 64-arch pool over a 24 h trace runs >= 10x faster than the seed
+per-arch loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from benchmarks.common import Row, SERVING_POOL, print_rows, write_artifact
+from repro.core.schedulers import SCHEDULERS, VECTOR_SCHEDULERS
+from repro.core.sim import replicate_pool, simulate, simulate_reference
+from repro.core.traces import get_trace
+
+POOL_SIZES = (4, 16, 64)
+DAY_TICKS = 86_400
+BASELINE_TICKS = 1_000       # seed loop is ~200x slower; extrapolate from this
+MEAN_RPS = 400.0
+STRICT_FRAC = 0.25
+
+
+def run() -> bool:
+    t0 = time.perf_counter()
+    trace = get_trace("berkeley", DAY_TICKS, mean_rps=MEAN_RPS)
+    payload = {"pool_sizes": {}, "baseline": {}}
+
+    for n in POOL_SIZES:
+        wl = replicate_pool(SERVING_POOL, n, strict_frac=STRICT_FRAC)
+        t = time.perf_counter()
+        res = simulate(trace, wl, VECTOR_SCHEDULERS["paragon"]())
+        wall = time.perf_counter() - t
+        payload["pool_sizes"][str(n)] = {
+            "ticks": DAY_TICKS,
+            "wall_s": wall,
+            "ticks_per_s": DAY_TICKS / wall,
+            "violation_rate": res.violation_rate,
+            "cost_total": res.cost_total,
+        }
+
+    # seed baseline: the per-arch loop at the largest pool, short slice
+    n = POOL_SIZES[-1]
+    wl = replicate_pool(SERVING_POOL, n, strict_frac=STRICT_FRAC)
+    t = time.perf_counter()
+    simulate_reference(trace[:BASELINE_TICKS], wl, SCHEDULERS["paragon"]())
+    wall = time.perf_counter() - t
+    baseline_tps = BASELINE_TICKS / wall
+    payload["baseline"] = {
+        "pool_size": n,
+        "ticks": BASELINE_TICKS,
+        "wall_s": wall,
+        "ticks_per_s": baseline_tps,
+    }
+
+    engine_tps = payload["pool_sizes"][str(n)]["ticks_per_s"]
+    speedup = engine_tps / baseline_tps
+    payload["speedup_64arch"] = speedup
+
+    rows: List[Row] = [
+        (
+            f"engine_ticks_per_s_{n}", payload["pool_sizes"][str(n)]["ticks_per_s"],
+            "vectorized engine, 24h trace", True,
+        )
+        for n in POOL_SIZES
+    ]
+    rows.append((
+        "seed_loop_ticks_per_s_64", baseline_tps, "seed per-arch loop", True,
+    ))
+    rows.append((
+        "speedup_64arch_day", speedup,
+        "64-arch 86400-tick pool >= 10x faster than the seed loop",
+        speedup >= 10.0,
+    ))
+
+    write_artifact("BENCH_sim_throughput", payload)
+    return print_rows("sim_throughput", rows, t0)
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run() else 1)

@@ -18,7 +18,7 @@ from typing import List
 
 from benchmarks.common import PRICING_X, Row, print_rows, write_artifact
 from repro.core.schedulers import SCHEDULERS
-from repro.core.simulator import ArchLoad, simulate
+from repro.core.sim import ArchLoad, simulate
 from repro.core.traces import get_trace
 
 WORKLOAD = [ArchLoad("llama3-8b", 0.6, 0.25), ArchLoad("minicpm-2b", 0.4, 0.25)]

@@ -9,7 +9,7 @@ from repro.core import get_trace, simulate
 from repro.core.rl import EnvConfig, PPOConfig, ServingEnv, train_ppo
 from repro.core.rl.ppo import evaluate_policy
 from repro.core.schedulers import SCHEDULERS
-from repro.core.simulator import ArchLoad
+from repro.core.sim import ArchLoad
 
 
 def main() -> None:

@@ -5,7 +5,9 @@ Layers:
   profiles         — derived offline-profiling table (latency/accuracy/cost)
   traces           — statistical twins of the four request-arrival traces
   load_monitor     — windowed peak-to-median estimation (Observation 4)
-  simulator        — trace-driven discrete-event serving simulator
+  sim              — trace-driven serving simulation package: vectorized
+                     queues, resource tiers (reserved/spot/burst), ledger,
+                     and the tick engine (simulator.py is a compat shim)
   schedulers       — reactive / util_aware / exascale / mixed / paragon
   model_selection  — naive vs paragon (least-cost under constraints)
   rl               — PPO controller (§V, implemented beyond the paper)
@@ -27,11 +29,14 @@ from repro.core.profiles import (  # noqa: F401
     model_pool,
 )
 from repro.core.schedulers import SCHEDULERS, get_scheduler  # noqa: F401
-from repro.core.simulator import (  # noqa: F401
+from repro.core.sim import (  # noqa: F401
     Action,
     ArchLoad,
     ArchObs,
+    PoolAction,
+    PoolObs,
     SimResult,
+    replicate_pool,
     simulate,
     uniform_pool_workload,
 )

@@ -102,7 +102,7 @@ def selection_workload(
     Returns (ArchLoad list, skipped) where ``skipped`` counts constraints
     no model satisfies (dropped from the stream).
     """
-    from repro.core.simulator import ArchLoad  # local: avoid import cycle
+    from repro.core.sim import ArchLoad  # local: avoid import cycle
 
     pick = SELECTORS[selector]
     counts: Dict[str, int] = {}

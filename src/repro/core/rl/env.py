@@ -27,7 +27,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.hardware import PRICING, FleetPricing
-from repro.core.simulator import Action, ArchLoad, ServingSim
+from repro.core.sim import Action, ArchLoad, ServingSim
 
 HEADROOMS = (0.85, 1.0, 1.15, 1.4)
 OFFLOADS = ("none", "blind", "slack_aware")

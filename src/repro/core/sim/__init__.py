@@ -1,0 +1,45 @@
+"""Composable serving-simulation package (paper §II-C / §IV methodology).
+
+Subsystems, each its own module, composed by the engine's tick pipeline
+``admit -> provision -> serve -> offload -> drop -> account``:
+
+  types       — workload description, latency classes, policy interfaces
+                (per-arch dicts and pool-wide structure-of-arrays)
+  queues      — age-bucketed class queues, vectorized over the pool
+  fleet       — resource tiers: reserved / spot / burst behind one
+                interface (a new tier type is one subclass)
+  accounting  — the cost / violation / over-provision ledger
+  engine      — :class:`ServingSim` (the tick loop) and ``simulate``
+  reference   — the seed per-arch loop, kept as the golden oracle
+
+``repro.core.simulator`` re-exports this surface, so seed-era imports
+keep working unchanged.
+"""
+from repro.core.sim.accounting import Ledger, SimResult  # noqa: F401
+from repro.core.sim.engine import ArchView, ServingSim, simulate  # noqa: F401
+from repro.core.sim.fleet import (  # noqa: F401
+    BurstTier,
+    ProvisionPipeline,
+    ResourceTier,
+    SpotTier,
+)
+from repro.core.sim.queues import BucketQueue, QueueArray  # noqa: F401
+from repro.core.sim.reference import ReferenceSim, simulate_reference  # noqa: F401
+from repro.core.sim.types import (  # noqa: F401
+    CLASSES,
+    OFFLOAD_BLIND,
+    OFFLOAD_MODES,
+    OFFLOAD_NONE,
+    OFFLOAD_SLACK_AWARE,
+    RELAXED,
+    STRICT,
+    Action,
+    ArchLoad,
+    ArchObs,
+    Policy,
+    PoolAction,
+    PoolObs,
+    VectorPolicy,
+    replicate_pool,
+    uniform_pool_workload,
+)

@@ -1,0 +1,115 @@
+"""Cost / violation / over-provision ledger.
+
+:class:`SimResult` is the reported record (the paper's three metrics:
+cost, SLO violations, over-provisioning); :class:`Ledger` is the
+write-side the engine and tiers post into each tick.  Keeping the
+accumulation behind one interface means a new tier only needs a name —
+``add_tier_cost("harvest", ...)`` — and the demand-side bookkeeping
+stays in one place.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclass
+class SimResult:
+    cost_reserved: float = 0.0
+    cost_spot: float = 0.0
+    cost_burst: float = 0.0
+    # tiers beyond the three canonical ones post here, keyed by tier name
+    cost_other: Dict[str, float] = field(default_factory=dict)
+    served_vm: float = 0.0
+    served_burst: float = 0.0
+    violations: float = 0.0
+    violations_strict: float = 0.0
+    total_requests: float = 0.0
+    chip_seconds: float = 0.0
+    chip_seconds_needed: float = 0.0
+    chip_seconds_over: float = 0.0
+    timeline: List[dict] = field(default_factory=list)
+
+    preemptions: int = 0
+
+    @property
+    def cost_total(self) -> float:
+        return (self.cost_reserved + self.cost_spot + self.cost_burst
+                + sum(self.cost_other.values()))
+
+    @property
+    def violation_rate(self) -> float:
+        return self.violations / max(self.total_requests, 1e-9)
+
+    @property
+    def overprovision_ratio(self) -> float:
+        """Idle-capacity chip-seconds as a fraction of needed chip-seconds."""
+        return self.chip_seconds_over / max(self.chip_seconds_needed, 1e-9)
+
+    def summary(self) -> dict:
+        return {
+            "cost_total": round(self.cost_total, 4),
+            "cost_reserved": round(self.cost_reserved, 4),
+            "cost_spot": round(self.cost_spot, 4),
+            "cost_burst": round(self.cost_burst, 4),
+            "preemptions": self.preemptions,
+            "violation_rate": round(self.violation_rate, 5),
+            "violations_strict": round(self.violations_strict, 1),
+            "served_vm": round(self.served_vm, 1),
+            "served_burst": round(self.served_burst, 1),
+            "overprovision_ratio": round(self.overprovision_ratio, 4),
+            "chip_seconds": round(self.chip_seconds, 1),
+        }
+
+
+class Ledger:
+    """Write-side of :class:`SimResult` used by the engine and the tiers."""
+
+    def __init__(self) -> None:
+        self.res = SimResult()
+
+    # -- demand side ---------------------------------------------------------
+    def add_arrivals(self, n: float) -> None:
+        self.res.total_requests += n
+
+    def add_served_vm(self, n: float) -> None:
+        self.res.served_vm += n
+
+    def add_violations(self, n: float, strict: float = 0.0) -> None:
+        self.res.violations += n
+        self.res.violations_strict += strict
+
+    # -- supply side ---------------------------------------------------------
+    def add_tier_cost(self, tier: str, dollars: float) -> None:
+        attr = f"cost_{tier}"
+        if hasattr(self.res, attr):
+            setattr(self.res, attr, getattr(self.res, attr) + dollars)
+        else:                       # a tier type added after this ledger
+            other = self.res.cost_other
+            other[tier] = other.get(tier, 0.0) + dollars
+
+    def add_burst(self, cost: float, served: float, violations: float,
+                  strict: bool) -> None:
+        self.res.cost_burst += cost
+        self.res.served_burst += served
+        self.add_violations(violations, violations if strict else 0.0)
+
+    def add_preemptions(self, n: int) -> None:
+        self.res.preemptions += n
+
+    def add_capacity(
+        self,
+        chip_seconds: np.ndarray,       # held chip-seconds per arch, all tiers
+        rates: np.ndarray,              # this tick's arrivals per arch
+        throughput: np.ndarray,         # per-instance req/s per arch
+        chips_per_instance: np.ndarray,
+    ) -> None:
+        """Over-provisioning bookkeeping: held vs minimally-needed chips."""
+        need = np.ceil(rates / throughput) * chips_per_instance
+        self.res.chip_seconds += float(chip_seconds.sum())
+        self.res.chip_seconds_needed += float(need.sum())
+        self.res.chip_seconds_over += float(
+            np.maximum(chip_seconds - need, 0.0).sum()
+        )

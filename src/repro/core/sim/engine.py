@@ -1,0 +1,465 @@
+"""The tick engine: admit -> provision -> serve -> offload -> drop -> account.
+
+Time-stepped fluid simulation at 1 s ticks (paper §II-C / §IV
+methodology): trace-driven arrivals fan out over a model pool, each
+(arch, latency-class) pair keeps an age-bucketed FIFO queue
+(:mod:`repro.core.sim.queues`), resource tiers serve at their profiled
+throughput (:mod:`repro.core.sim.fleet`), and a procurement policy
+decides — every tick — the per-tier fleet targets and which queued
+requests to offload to burst instances.  Metrics accumulate in the
+ledger (:mod:`repro.core.sim.accounting`).
+
+All pool state is structure-of-arrays, so one tick costs O(A) NumPy work
+however many architectures the pool holds; a 64-arch 24 h trace runs in
+seconds.  Policies can speak either interface:
+
+* the legacy dict form — ``observe() -> {arch: ArchObs}``,
+  ``apply({arch: Action})`` — unchanged from the seed simulator;
+* the vectorized form — ``observe_pool() -> PoolObs``,
+  ``apply_pool(PoolAction)`` — arrays end-to-end, used by the
+  ``Vector*`` schedulers on large pools.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.hardware import PRICING, FleetPricing
+from repro.core.load_monitor import LoadMonitor
+from repro.core.profiles import ModelProfile, get_profile
+from repro.core.sim.accounting import Ledger, SimResult
+from repro.core.sim.fleet import BurstTier, ResourceTier, SpotTier
+from repro.core.sim.queues import QueueArray
+from repro.core.sim.types import (
+    OFFLOAD_MODES,
+    RELAXED,
+    STRICT,
+    Action,
+    ArchLoad,
+    ArchObs,
+    Policy,
+    PoolAction,
+    PoolObs,
+)
+
+_OFFLOAD_CODE = {m: i for i, m in enumerate(OFFLOAD_MODES)}
+
+# monitor parameters come from LoadMonitor so the engine's precomputed
+# window statistics can never drift from the reference simulator's
+MONITOR_WINDOW_S = LoadMonitor.window_s
+MONITOR_EWMA_ALPHA = LoadMonitor.ewma_alpha
+
+
+def _trace_window_stats(trace: np.ndarray, window: int):
+    """Sliding-window peak and median of the whole trace, precomputed.
+
+    The load monitor's window statistics depend only on the (known)
+    trace, so one upfront O(T * W) pass replaces a per-tick ``np.median``
+    in the hot loop.  The first ``window - 1`` ticks use growing windows,
+    matching the seed :class:`~repro.core.load_monitor.LoadMonitor`.
+    """
+    n = len(trace)
+    peak = np.empty(n)
+    med = np.empty(n)
+    for t in range(min(window - 1, n)):
+        peak[t] = trace[: t + 1].max()
+        med[t] = np.median(trace[: t + 1])
+    if n >= window:
+        sw = np.lib.stride_tricks.sliding_window_view(trace, window)
+        for s in range(0, len(sw), 8192):   # chunk: bounds partition scratch
+            blk = sw[s: s + 8192]
+            peak[window - 1 + s: window - 1 + s + len(blk)] = blk.max(axis=1)
+            med[window - 1 + s: window - 1 + s + len(blk)] = np.median(blk, axis=1)
+    return peak, med
+
+
+# ---------------------------------------------------------------------------
+# Per-arch compatibility views over the SoA state.
+# ---------------------------------------------------------------------------
+class _QueueView:
+    """Scalar window into one arch's row of a :class:`QueueArray`."""
+
+    __slots__ = ("_q", "_i")
+
+    def __init__(self, q: QueueArray, i: int):
+        self._q, self._i = q, i
+
+    @property
+    def total(self) -> float:
+        return float(self._q.buf[self._i].sum())
+
+    def __len__(self) -> int:
+        return int(self.total)
+
+
+class _MonitorView:
+    """Per-arch load-monitor statistics (arch rate = share x pool rate)."""
+
+    __slots__ = ("_sim", "_i")
+
+    def __init__(self, sim: "ServingSim", i: int):
+        self._sim, self._i = sim, i
+
+    @property
+    def rate(self) -> float:
+        return float(self._sim._ewma * self._sim.share[self._i])
+
+    @property
+    def peak(self) -> float:
+        return float(self._sim._window_peak * self._sim.share[self._i])
+
+    @property
+    def peak_to_median(self) -> float:
+        return float(self._sim._p2m)
+
+
+class ArchView:
+    """Read view of one arch's slice of the engine state — what the seed
+    simulator called ``_ArchState``.  Kept so stepwise drivers (the RL
+    env) can keep reading per-arch fields."""
+
+    def __init__(self, sim: "ServingSim", i: int, load: ArchLoad,
+                 prof: ModelProfile):
+        self._sim, self._i = sim, i
+        self.load = load
+        self.prof = prof
+        self.queues = {
+            "strict": _QueueView(sim.q_strict, i),
+            "relaxed": _QueueView(sim.q_relaxed, i),
+        }
+        self.monitor = _MonitorView(sim, i)
+
+    @property
+    def throughput(self) -> float:
+        return float(self._sim.throughput[self._i])
+
+    @property
+    def n_active(self) -> int:
+        return int(self._sim.reserved.active[self._i])
+
+    @property
+    def n_spot(self) -> int:
+        return int(self._sim.spot.active[self._i])
+
+    @property
+    def n_pending(self) -> int:
+        return int(self._sim.reserved.pending_total[self._i])
+
+    @property
+    def slack(self) -> Dict[str, int]:
+        return {
+            "strict": int(self._sim.q_strict.slack[self._i]),
+            "relaxed": int(self._sim.q_relaxed.slack[self._i]),
+        }
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+class ServingSim:
+    """Stepwise serving simulator: ``observe() -> actions -> apply()``."""
+
+    def __init__(
+        self,
+        trace: np.ndarray,
+        workload: List[ArchLoad],
+        *,
+        pricing: FleetPricing = PRICING,
+        prewarm: bool = True,
+        warm_start: bool = True,
+        seed: int = 0,
+    ):
+        self.trace = np.asarray(trace, dtype=np.float64)
+        self.pricing = pricing
+        self.rng = np.random.default_rng(seed)   # spot preemption draws
+        self.tick = 0
+
+        keys = [w.key for w in workload]
+        assert len(set(keys)) == len(keys), "workload keys must be unique"
+        self.keys = keys
+        n = len(workload)
+
+        profs = [get_profile(w.arch, req=STRICT) for w in workload]
+        self.share = np.array([w.share for w in workload])
+        self.strict_frac = np.array([w.strict_frac for w in workload])
+        self.throughput = np.array([p.throughput(STRICT) for p in profs])
+        for w, thr in zip(workload, self.throughput):
+            assert thr > 0, f"{w.arch} cannot meet the strict SLO"
+        self.chips = np.array([p.chips for p in profs], dtype=np.float64)
+        lat_b1 = np.array([p.request_latency(STRICT, 1) for p in profs])
+        self.lat_b1 = lat_b1
+
+        # class queues: slack = SLO minus the batch-1 model latency
+        slack_strict = np.maximum(0, (STRICT.slo_s - lat_b1).astype(np.int64))
+        slack_relaxed = np.maximum(0, (RELAXED.slo_s - lat_b1).astype(np.int64))
+        self.q_strict = QueueArray(n, STRICT.slo_s, slack_strict)
+        self.q_relaxed = QueueArray(n, RELAXED.slo_s, slack_relaxed)
+
+        # resource tiers: reserved slices + spot slices serve the queues;
+        # the burst pool absorbs offloads per-invocation
+        self.reserved = ResourceTier(n, pricing)
+        self.spot = SpotTier(n, pricing)
+        self.burst = BurstTier(
+            pricing,
+            lat_b1=lat_b1,
+            cold_start_s=np.array([p.cold_start_s() for p in profs]),
+            cost_per_request=(
+                self.chips / self.throughput
+            ) * pricing.burst_chip_s + pricing.burst_invocation_fee,
+            prewarm=prewarm,
+        )
+
+        self.ledger = Ledger()
+        self.last_util = np.zeros(n)
+        self._ewma: Optional[float] = None
+        self._wpeak, self._wmed = _trace_window_stats(
+            self.trace, MONITOR_WINDOW_S
+        )
+        self._window_peak = 0.0
+        self._p2m = 1.0
+        self._rates = np.zeros(n)
+        self._pool_obs: Optional[PoolObs] = None
+        self._spot_live = False
+
+        self.states: Dict[str, ArchView] = {
+            k: ArchView(self, i, w, p)
+            for i, (k, w, p) in enumerate(zip(keys, workload, profs))
+        }
+
+        if warm_start:
+            self.reserved.active = np.maximum(
+                1, np.ceil(self.trace[0] * self.share / self.throughput)
+            ).astype(np.int64)
+
+    # ------------------------------------------------------------------
+    @property
+    def res(self) -> SimResult:
+        return self.ledger.res
+
+    @property
+    def done(self) -> bool:
+        return self.tick >= len(self.trace)
+
+    # ------------------------------------------------------------------
+    # Admit + observe.
+    # ------------------------------------------------------------------
+    def observe_pool(self) -> PoolObs:
+        """Admit this tick's arrivals and return the pool observation."""
+        tick = self.tick
+        rate = float(self.trace[tick])
+
+        # load monitor, vectorized: every arch's stream is share x the
+        # pool stream, so EWMA/peak/median scale by share and the
+        # peak-to-median ratio is share-invariant
+        self._ewma = (
+            rate if self._ewma is None
+            else MONITOR_EWMA_ALPHA * rate + (1 - MONITOR_EWMA_ALPHA) * self._ewma
+        )
+        self._window_peak = float(self._wpeak[tick])
+        med = float(self._wmed[tick])
+        self._p2m = self._window_peak / med if med > 0 else 1.0
+
+        rates = rate * self.share
+        n_strict = rates * self.strict_frac
+        self.q_strict.push(tick, n_strict)
+        self.q_relaxed.push(tick, rates - n_strict)
+        self.ledger.add_arrivals(float(rates.sum()))
+        self._rates = rates
+
+        self._pool_obs = PoolObs(
+            keys=self.keys,
+            rate=rates,
+            ewma_rate=self._ewma * self.share,
+            window_peak=self._window_peak * self.share,
+            peak_to_median=np.where(self.share > 0, self._p2m, 1.0),
+            queue_len=self.q_strict.totals() + self.q_relaxed.totals(),
+            n_active=self.reserved.active.copy(),
+            n_pending=self.reserved.pending_total.copy(),
+            n_spot=self.spot.active.copy(),
+            throughput=self.throughput.copy(),
+            utilization=self.last_util.copy(),
+        )
+        return self._pool_obs
+
+    def observe(self) -> Dict[str, ArchObs]:
+        """Dict form of :meth:`observe_pool` (legacy policy interface)."""
+        p = self.observe_pool()
+        return {
+            k: ArchObs(
+                arch=k,
+                rate=float(p.rate[i]),
+                ewma_rate=float(p.ewma_rate[i]),
+                window_peak=float(p.window_peak[i]),
+                peak_to_median=float(p.peak_to_median[i]),
+                queue_len=float(p.queue_len[i]),
+                n_active=int(p.n_active[i]),
+                n_pending=int(p.n_pending[i]),
+                n_spot=int(p.n_spot[i]),
+                throughput=float(p.throughput[i]),
+                utilization=float(p.utilization[i]),
+            )
+            for i, k in enumerate(self.keys)
+        }
+
+    # ------------------------------------------------------------------
+    # Apply.
+    # ------------------------------------------------------------------
+    def apply(self, actions: Dict[str, Action]) -> dict:
+        """Apply per-arch dict actions, serve the tick, advance time.
+
+        Returns this tick's marginal metrics (for RL rewards)."""
+        n = len(self.keys)
+        target = np.empty(n, dtype=np.int64)
+        offload = np.zeros(n, dtype=np.int64)
+        spot_target = np.zeros(n, dtype=np.int64)
+        for i, k in enumerate(self.keys):
+            act = actions.get(k)
+            if act is None:
+                target[i] = self.reserved.active[i]
+            else:
+                target[i] = act.target
+                # unknown offload values mean "none", as in the seed loop
+                offload[i] = _OFFLOAD_CODE.get(act.offload, 0)
+                spot_target[i] = act.spot_target
+        return self._step(target, offload, spot_target)
+
+    def apply_pool(self, action: PoolAction) -> dict:
+        """Vectorized counterpart of :meth:`apply`."""
+        n = len(self.keys)
+        return self._step(
+            np.asarray(action.target, dtype=np.int64),
+            action.offload_codes(n),
+            action.spot_targets(n),
+        )
+
+    def _step(
+        self,
+        target: np.ndarray,
+        offload: np.ndarray,
+        spot_target: np.ndarray,
+    ) -> dict:
+        assert self._pool_obs is not None, "call observe() before apply()"
+        tick = self.tick
+        led = self.ledger
+        res = led.res
+        cost0, viol0 = res.cost_total, res.violations
+
+        # provision: each tier runs its events + pipeline toward its target
+        self.reserved.begin_tick(tick, self.rng, led)
+        self.reserved.set_target(tick, target)
+        if self._spot_live or spot_target.any():
+            self.spot.begin_tick(tick, self.rng, led)
+            self.spot.set_target(tick, spot_target)
+            self._spot_live = bool(
+                self.spot.active.any() or self.spot.pipeline.total.any()
+            )
+
+        # serve from the class queues, strict first, oldest first
+        capacity = (self.reserved.active + self.spot.active) * self.throughput
+        served_s, late_s = self.q_strict.serve(tick, capacity)
+        served_r, late_r = self.q_relaxed.serve(tick, capacity - served_s)
+        served = served_s + served_r
+        led.add_served_vm(float(served.sum()))
+        led.add_violations(float(late_s.sum() + late_r.sum()), float(late_s.sum()))
+        self.last_util = np.where(
+            capacity > 0, served / np.where(capacity > 0, capacity, 1.0), 1.0
+        )
+
+        # offload decision: what leaves the queue for burst instances.
+        #   blind       — anything unserved goes now, both classes
+        #                 (MArk/Spock assume one global SLO)
+        #   slack_aware — Paragon: strict queries offload when a VM slot
+        #                 is unavailable; relaxed queries NEVER pay the
+        #                 burst premium ("does not offload to lambdas for
+        #                 relaxed latency queries", §IV-B)
+        for q, mask, strict in (
+            (self.q_strict, offload >= 1, True),
+            (self.q_relaxed, offload == 1, False),
+        ):
+            if mask.any():
+                counts = q.drain(mask)
+                # sub-epsilon residue of the cumsum serve is not real
+                # offload mass (the seed's BucketQueue absorbed it at its
+                # 1e-12 threshold) and must not warm the burst pool
+                counts[counts <= 1e-9] = 0.0
+                if counts.any():
+                    self.burst.offload(tick, counts, q.slo_s, strict, led)
+
+        # abandon hopeless VM-only waiters (count violation once):
+        # anything older than 3x its SLO is recorded and dropped so
+        # queues cannot grow without bound under sustained shortfall.
+        for q, strict in ((self.q_strict, True), (self.q_relaxed, False)):
+            dropped = float(q.drop_expired(tick).sum())
+            if dropped > 0:
+                led.add_violations(dropped, dropped if strict else 0.0)
+                led.add_served_vm(dropped)   # still answered, just very late
+
+        # accounting
+        chip_s = self.reserved.account(led, self.chips)
+        if self._spot_live:
+            chip_s = chip_s + self.spot.account(led, self.chips)
+        led.add_capacity(chip_s, self._rates, self.throughput, self.chips)
+
+        self.tick += 1
+        if self.done:
+            self._finalize()
+        return {
+            "cost": res.cost_total - cost0,
+            "violations": res.violations - viol0,
+        }
+
+    def _finalize(self) -> None:
+        # end-of-trace: whatever is still queued past its slack violates
+        end = len(self.trace)
+        for q, strict in ((self.q_strict, True), (self.q_relaxed, False)):
+            late = float(q.pop_older_than_slack(end).sum())
+            self.ledger.add_violations(late, late if strict else 0.0)
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        queued = self.q_strict.totals() + self.q_relaxed.totals()
+        return {
+            "t": self.tick,
+            "rate": float(self.trace[min(self.tick, len(self.trace) - 1)]),
+            "active": {
+                k: int(self.reserved.active[i]) for i, k in enumerate(self.keys)
+            },
+            "queued": {k: float(queued[i]) for i, k in enumerate(self.keys)},
+        }
+
+
+def simulate(
+    trace: np.ndarray,                       # per-second arrival rate (req/s)
+    workload: List[ArchLoad],
+    policy,                                  # Policy or VectorPolicy
+    *,
+    pricing: FleetPricing = PRICING,
+    prewarm: bool = True,
+    warm_start: bool = True,                 # fleet starts sized for t=0 load
+    record_timeline: bool = False,
+) -> SimResult:
+    """Closed-loop run: the policy drives :class:`ServingSim` over the trace.
+
+    Policies with a truthy ``vectorized`` attribute get the SoA interface
+    (``PoolObs -> PoolAction``); everything else gets the dict interface.
+    """
+    sim = ServingSim(
+        trace, workload, pricing=pricing, prewarm=prewarm, warm_start=warm_start
+    )
+    vectorized = bool(getattr(policy, "vectorized", False))
+    while not sim.done:
+        if vectorized:
+            pobs = sim.observe_pool()
+            action = policy(sim.tick, pobs)
+            if record_timeline:
+                sim.res.timeline.append(sim.snapshot())
+            sim.apply_pool(action)
+        else:
+            obs = sim.observe()
+            actions = policy(sim.tick, obs)
+            if record_timeline:
+                sim.res.timeline.append(sim.snapshot())
+            sim.apply(actions)
+    return sim.res

@@ -1,0 +1,186 @@
+"""Resource tiers — the procurement side of the serving fleet.
+
+The paper's system buys capacity from heterogeneous cloud offerings:
+long-lived reserved slices (VMs), preemptible spot slices (§VI), and a
+per-invocation burst pool (serverless functions).  Each offering is one
+:class:`ResourceTier`: it owns its pool-wide instance counts as arrays,
+runs its provisioning pipeline each tick, and knows its price.  Adding a
+new offering (harvest VMs, a second region, ...) is one subclass — the
+engine only speaks the tier interface.
+
+All state is structure-of-arrays over the pool: ``active[a]`` instances
+per arch, and a :class:`ProvisionPipeline` ring buffer of launches in
+flight, so a tick is O(A) NumPy work regardless of pool size.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.hardware import FleetPricing
+from repro.core.sim.accounting import Ledger
+
+
+# ---------------------------------------------------------------------------
+# Fixed-latency provisioning pipeline, vectorized over the pool.
+# ---------------------------------------------------------------------------
+class ProvisionPipeline:
+    """Launches become ready exactly ``latency_s`` ticks later.
+
+    ``buf[a, t % L]`` counts instances arch ``a`` launched at tick ``t``;
+    cancellations remove the *newest* launches first (matching the seed
+    semantics: not-yet-ready slices are cancelled before active ones are
+    released).
+    """
+
+    def __init__(self, n_archs: int, latency_s: float):
+        self.lat = max(int(latency_s), 1)
+        self.buf = np.zeros((n_archs, self.lat), dtype=np.int64)
+        self.total = np.zeros(n_archs, dtype=np.int64)
+
+    def pop_ready(self, tick: int) -> np.ndarray:
+        """Instances launched ``lat`` ticks ago come online now."""
+        col = tick % self.lat
+        ready = self.buf[:, col].copy()
+        self.buf[:, col] = 0
+        self.total -= ready
+        return ready
+
+    def launch(self, tick: int, counts: np.ndarray) -> None:
+        self.buf[:, tick % self.lat] += counts
+        self.total += counts
+
+    def cancel_newest(self, tick: int, counts: np.ndarray) -> None:
+        """Cancel up to ``counts[a]`` in-flight launches, newest first."""
+        launch_ticks = np.arange(tick, tick - self.lat, -1)   # newest -> oldest
+        idx = launch_ticks % self.lat
+        pending = self.buf[:, idx]
+        before = np.cumsum(pending, axis=1) - pending
+        take = np.minimum(pending, np.clip(counts[:, None] - before, 0, None))
+        self.buf[:, idx] = pending - take
+        self.total -= take.sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Tier base: reserved (on-demand) slices.
+# ---------------------------------------------------------------------------
+class ResourceTier:
+    """A pool of slices with a provisioning pipeline and a price.
+
+    Tick protocol (driven by the engine):
+      ``begin_tick``  — tier-internal events (e.g. spot reclaims)
+      ``set_target``  — provisioning: admit ready launches, then grow or
+                        shrink toward the policy's per-arch target
+      ``account``     — bill this tick's held capacity into the ledger
+    """
+
+    name = "reserved"
+
+    def __init__(self, n_archs: int, pricing: FleetPricing):
+        self.pricing = pricing
+        self.active = np.zeros(n_archs, dtype=np.int64)
+        self.pipeline = ProvisionPipeline(n_archs, self.provision_latency_s())
+
+    # -- per-tier knobs ------------------------------------------------------
+    def provision_latency_s(self) -> float:
+        return self.pricing.reserved_provision_s
+
+    def price_per_chip_s(self) -> float:
+        return self.pricing.reserved_chip_s
+
+    # -- tick protocol -------------------------------------------------------
+    def begin_tick(self, tick: int, rng: np.random.Generator, ledger: Ledger) -> None:
+        """Tier-internal events before provisioning (default: none)."""
+
+    def set_target(self, tick: int, target: np.ndarray) -> None:
+        self.active += self.pipeline.pop_ready(tick)
+        in_flight = self.active + self.pipeline.total
+        grow = np.maximum(target - in_flight, 0)
+        if grow.any():
+            self.pipeline.launch(tick, grow)
+        shrink = in_flight - target
+        if (shrink > 0).any():
+            cancel = np.clip(np.minimum(self.pipeline.total, shrink), 0, None)
+            if cancel.any():
+                self.pipeline.cancel_newest(tick, cancel)
+            self.active = np.where(
+                shrink > 0,
+                np.minimum(self.active, np.maximum(target, 0)),
+                self.active,
+            )
+
+    def account(self, ledger: Ledger, chips_per_instance: np.ndarray) -> np.ndarray:
+        """Bill held capacity; returns this tier's chip-seconds per arch."""
+        chip_s = self.active * chips_per_instance
+        ledger.add_tier_cost(self.name, float(chip_s.sum()) * self.price_per_chip_s())
+        return chip_s
+
+    @property
+    def pending_total(self) -> np.ndarray:
+        return self.pipeline.total
+
+
+# ---------------------------------------------------------------------------
+# Spot tier: cheap, preemptible (paper §VI future work, implemented).
+# ---------------------------------------------------------------------------
+class SpotTier(ResourceTier):
+    name = "spot"
+
+    def provision_latency_s(self) -> float:
+        return self.pricing.spot_provision_s
+
+    def price_per_chip_s(self) -> float:
+        return self.pricing.reserved_chip_s * self.pricing.spot_discount
+
+    def begin_tick(self, tick: int, rng: np.random.Generator, ledger: Ledger) -> None:
+        if self.active.any():
+            p_reclaim = 1.0 - math.exp(-self.pricing.spot_preempt_rate)
+            reclaimed = rng.binomial(self.active, p_reclaim)
+            self.active -= reclaimed
+            ledger.add_preemptions(int(reclaimed.sum()))
+
+
+# ---------------------------------------------------------------------------
+# Burst tier: per-invocation serverless pool (no instances held).
+# ---------------------------------------------------------------------------
+class BurstTier:
+    """The serverless analog: requests offloaded here never queue — they
+    pay a premium per invocation and a spin-up (plus cold-start when the
+    pool has not seen the model within the idle timeout)."""
+
+    name = "burst"
+
+    def __init__(
+        self,
+        pricing: FleetPricing,
+        lat_b1: np.ndarray,            # batch-1 model latency per arch
+        cold_start_s: np.ndarray,      # weight-fetch cold start per arch
+        cost_per_request: np.ndarray,  # provider-batched billing per arch
+        prewarm: bool,
+    ):
+        n = len(lat_b1)
+        self.pricing = pricing
+        self.lat_b1 = np.asarray(lat_b1, dtype=np.float64)
+        self.cold_start_s = np.asarray(cold_start_s, dtype=np.float64)
+        self.cost_per_request = np.asarray(cost_per_request, dtype=np.float64)
+        self.last_used = np.zeros(n) if prewarm else np.full(n, -math.inf)
+
+    def latency(self, tick: int) -> np.ndarray:
+        cold = (tick - self.last_used) > self.pricing.burst_idle_timeout_s
+        return self.pricing.burst_spinup_s + self.lat_b1 + cold * self.cold_start_s
+
+    def offload(
+        self, tick: int, counts: np.ndarray, slo_s: float, strict: bool,
+        ledger: Ledger,
+    ) -> None:
+        """Send ``counts[a]`` requests to the burst pool right now."""
+        lat = self.latency(tick)
+        ledger.add_burst(
+            cost=float((self.cost_per_request * counts).sum()),
+            served=float(counts.sum()),
+            violations=float((counts * (lat > slo_s)).sum()),
+            strict=strict,
+        )
+        self.last_used = np.where(counts > 0, float(tick), self.last_used)

@@ -1,0 +1,141 @@
+"""Shared vocabulary of the simulation package.
+
+Everything a *policy* needs to speak to the engine lives here: the
+workload description (:class:`ArchLoad`), the two latency classes, the
+per-arch observation/action records of the legacy dict interface, and
+their structure-of-arrays counterparts (:class:`PoolObs` /
+:class:`PoolAction`) used by vectorized policies on large pools.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.profiles import RequestClass
+
+STRICT = RequestClass("strict", 512, 64, slo_s=2.0, strict=True)
+RELAXED = RequestClass("relaxed", 512, 64, slo_s=20.0, strict=False)
+
+#: latency classes in serving priority order (strict is served first)
+CLASSES = (STRICT, RELAXED)
+
+#: ``Action.offload`` modes, index == integer code in ``PoolAction.offload``
+OFFLOAD_MODES = ("none", "blind", "slack_aware")
+OFFLOAD_NONE, OFFLOAD_BLIND, OFFLOAD_SLACK_AWARE = range(3)
+
+
+# ---------------------------------------------------------------------------
+# Workload description.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ArchLoad:
+    arch: str
+    share: float                   # fraction of total arrivals
+    strict_frac: float = 0.5       # strict vs relaxed query mix (workload-1)
+    name: Optional[str] = None     # pool key; lets one arch appear many
+                                   # times in a large pool (defaults to arch)
+
+    @property
+    def key(self) -> str:
+        return self.name or self.arch
+
+
+def uniform_pool_workload(archs: List[str], strict_frac: float = 0.5) -> List[ArchLoad]:
+    return [ArchLoad(a, 1.0 / len(archs), strict_frac) for a in archs]
+
+
+def replicate_pool(
+    archs: List[str], n: int, strict_frac: float = 0.5
+) -> List[ArchLoad]:
+    """An ``n``-entry pool cycling through ``archs`` with unique keys —
+    the pool-scale workloads (50-100 model variants) of INFaaS-style
+    model-less serving, built from the profiled architectures we have."""
+    return [
+        ArchLoad(archs[i % len(archs)], 1.0 / n, strict_frac,
+                 name=f"{archs[i % len(archs)]}@{i}")
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Policy interface (legacy dict form — one record per arch per tick).
+# ---------------------------------------------------------------------------
+@dataclass
+class ArchObs:
+    arch: str
+    rate: float                    # this tick's arrivals (req/s)
+    ewma_rate: float
+    window_peak: float
+    peak_to_median: float
+    queue_len: float
+    n_active: int
+    n_pending: int
+    n_spot: int
+    throughput: float              # per-instance req/s
+    utilization: float             # served / capacity, last tick
+
+
+@dataclass
+class Action:
+    """Per-arch procurement decision for this tick.
+
+    ``offload`` semantics (who may go to burst, and when):
+      ``none``        — VM-only procurement (reactive / util_aware / exascale)
+      ``blind``       — ANY request not served this tick is offloaded
+                        immediately (MArk/Spock: one global SLO assumption)
+      ``slack_aware`` — a request offloads only when its own latency class
+                        is about to violate (paper's Paragon: relaxed
+                        queries ride out the spike in queue first)
+    """
+
+    target: int                    # desired reserved (on-demand) instances
+    offload: str = "none"          # none | blind | slack_aware
+    spot_target: int = 0           # desired SPOT instances (preemptible,
+                                   # spot_discount x price — §VI extension)
+
+
+Policy = Callable[[int, Dict[str, ArchObs]], Dict[str, Action]]
+
+
+# ---------------------------------------------------------------------------
+# Vectorized policy interface (structure-of-arrays over the whole pool).
+# ---------------------------------------------------------------------------
+@dataclass
+class PoolObs:
+    """One tick's observation for the whole pool, each field an ``[A]``
+    array aligned with ``keys``.  Field meanings match :class:`ArchObs`."""
+
+    keys: List[str]
+    rate: np.ndarray
+    ewma_rate: np.ndarray
+    window_peak: np.ndarray
+    peak_to_median: np.ndarray
+    queue_len: np.ndarray
+    n_active: np.ndarray
+    n_pending: np.ndarray
+    n_spot: np.ndarray
+    throughput: np.ndarray
+    utilization: np.ndarray
+
+
+@dataclass
+class PoolAction:
+    """Whole-pool procurement decision: ``target`` is required; ``offload``
+    holds integer codes indexing :data:`OFFLOAD_MODES`."""
+
+    target: np.ndarray
+    offload: Optional[np.ndarray] = None   # defaults to all-"none"
+    spot_target: Optional[np.ndarray] = None
+
+    def offload_codes(self, n: int) -> np.ndarray:
+        return (np.zeros(n, dtype=np.int64)
+                if self.offload is None else self.offload)
+
+    def spot_targets(self, n: int) -> np.ndarray:
+        return (np.zeros(n, dtype=np.int64)
+                if self.spot_target is None else self.spot_target)
+
+
+VectorPolicy = Callable[[int, PoolObs], PoolAction]

@@ -1,441 +1,29 @@
-"""Discrete-event serving simulator (paper §II-C / §IV methodology).
+"""Compatibility shim — the simulator now lives in :mod:`repro.core.sim`.
 
-Time-stepped fluid simulation at 1 s ticks: trace-driven arrivals fan out
-over a model pool, each (arch, latency-class) pair keeps an age-bucketed
-FIFO queue, reserved slices serve at their profiled throughput, and a
-procurement policy decides — every tick — the reserved-fleet targets and
-which queued requests to offload to burst instances.
+The seed's monolithic ``ServingSim`` was decomposed into composable
+subsystems (queues / fleet tiers / accounting / engine); this module
+re-exports the public surface so seed-era imports keep working:
 
-Faithful to the paper's methodology section: profiled values (here from
-:mod:`repro.core.profiles`, the analytical TPU characterization) drive a
-trace simulation; requests are associated with models from the pool; cost,
-SLO violations and over-provisioning are the reported metrics.
+    from repro.core.simulator import ServingSim, simulate, Action, ArchObs
+
+New code should import from :mod:`repro.core.sim` directly.
 """
-from __future__ import annotations
-
-import math
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Tuple
-
-import numpy as np
-
-from repro.core.hardware import PRICING, FleetPricing
-from repro.core.load_monitor import LoadMonitor
-from repro.core.profiles import (
-    STANDARD,
-    ModelProfile,
-    RequestClass,
-    get_profile,
+from repro.core.sim import (  # noqa: F401
+    Action,
+    ArchLoad,
+    ArchObs,
+    BucketQueue,
+    Policy,
+    PoolAction,
+    PoolObs,
+    RELAXED,
+    STRICT,
+    ServingSim,
+    SimResult,
+    simulate,
+    uniform_pool_workload,
 )
 
-STRICT = RequestClass("strict", 512, 64, slo_s=2.0, strict=True)
-RELAXED = RequestClass("relaxed", 512, 64, slo_s=20.0, strict=False)
-
-
-# ---------------------------------------------------------------------------
-# Workload description.
-# ---------------------------------------------------------------------------
-@dataclass(frozen=True)
-class ArchLoad:
-    arch: str
-    share: float                   # fraction of total arrivals
-    strict_frac: float = 0.5       # strict vs relaxed query mix (workload-1)
-
-
-def uniform_pool_workload(archs: List[str], strict_frac: float = 0.5) -> List[ArchLoad]:
-    return [ArchLoad(a, 1.0 / len(archs), strict_frac) for a in archs]
-
-
-# ---------------------------------------------------------------------------
-# Policy interface.
-# ---------------------------------------------------------------------------
-@dataclass
-class ArchObs:
-    arch: str
-    rate: float                    # this tick's arrivals (req/s)
-    ewma_rate: float
-    window_peak: float
-    peak_to_median: float
-    queue_len: float
-    n_active: int
-    n_pending: int
-    n_spot: int
-    throughput: float              # per-instance req/s
-    utilization: float             # served / capacity, last tick
-
-
-@dataclass
-class Action:
-    """Per-arch procurement decision for this tick.
-
-    ``offload`` semantics (who may go to burst, and when):
-      ``none``        — VM-only procurement (reactive / util_aware / exascale)
-      ``blind``       — ANY request not served this tick is offloaded
-                        immediately (MArk/Spock: one global SLO assumption)
-      ``slack_aware`` — a request offloads only when its own latency class
-                        is about to violate (paper's Paragon: relaxed
-                        queries ride out the spike in queue first)
-    """
-
-    target: int                    # desired reserved (on-demand) instances
-    offload: str = "none"          # none | blind | slack_aware
-    spot_target: int = 0           # desired SPOT instances (preemptible,
-                                   # spot_discount x price — §VI extension)
-
-
-Policy = Callable[[int, Dict[str, ArchObs]], Dict[str, Action]]
-
-
-# ---------------------------------------------------------------------------
-# Per-(arch, class) FIFO queue with age buckets.
-# ---------------------------------------------------------------------------
-class _Queue:
-    __slots__ = ("buckets",)
-
-    def __init__(self) -> None:
-        self.buckets: Deque[List[float]] = deque()  # [arrival_tick, count]
-
-    def push(self, tick: int, count: float) -> None:
-        if count > 0:
-            self.buckets.append([tick, count])
-
-    def __len__(self) -> int:
-        return int(sum(c for _, c in self.buckets))
-
-    @property
-    def total(self) -> float:
-        return sum(c for _, c in self.buckets)
-
-    def pop(self, amount: float) -> List[Tuple[int, float]]:
-        """Serve ``amount`` oldest-first; returns [(arrival_tick, count)]."""
-        out: List[Tuple[int, float]] = []
-        while amount > 1e-9 and self.buckets:
-            t0, c = self.buckets[0]
-            take = min(c, amount)
-            out.append((t0, take))
-            amount -= take
-            if take >= c - 1e-12:
-                self.buckets.popleft()
-            else:
-                self.buckets[0][1] = c - take
-        return out
-
-    def pop_older_than(self, tick: int, max_age: int) -> float:
-        """Remove and return the count of entries with age > max_age."""
-        n = 0.0
-        while self.buckets and tick - self.buckets[0][0] > max_age:
-            n += self.buckets.popleft()[1]
-        return n
-
-
-# ---------------------------------------------------------------------------
-# Per-arch serving state.
-# ---------------------------------------------------------------------------
-class _ArchState:
-    def __init__(self, load: ArchLoad, pricing: FleetPricing, prewarm: bool):
-        self.load = load
-        self.prof: ModelProfile = get_profile(load.arch, req=STRICT)
-        self.throughput = self.prof.throughput(STRICT)
-        assert self.throughput > 0, f"{load.arch} cannot meet the strict SLO"
-        self.lat_b1 = self.prof.request_latency(STRICT, 1)
-        self.slack = {
-            "strict": max(0, int(STRICT.slo_s - self.lat_b1)),
-            "relaxed": max(0, int(RELAXED.slo_s - self.lat_b1)),
-        }
-        self.queues = {"strict": _Queue(), "relaxed": _Queue()}
-        self.n_active = 0
-        self.pending: List[int] = []           # ready ticks
-        self.n_spot = 0
-        self.spot_pending: List[int] = []
-        self.monitor = LoadMonitor()
-        self.last_util = 0.0
-        # burst pool warmth: last tick the pool saw this model
-        self.burst_last_used = 0.0 if prewarm else -math.inf
-        self.pricing = pricing
-        # provider-batched burst billing (see ModelProfile.burst_cost_per_request)
-        self.burst_per_req = (
-            self.prof.chips / self.throughput
-        ) * pricing.burst_chip_s + pricing.burst_invocation_fee
-
-    # -- burst ----------------------------------------------------------------
-    def burst_latency(self, tick: int) -> float:
-        cold = (tick - self.burst_last_used) > self.pricing.burst_idle_timeout_s
-        lat = self.pricing.burst_spinup_s + self.lat_b1
-        if cold:
-            lat += self.prof.cold_start_s()
-        return lat
-
-
-# ---------------------------------------------------------------------------
-# Result record.
-# ---------------------------------------------------------------------------
-@dataclass
-class SimResult:
-    cost_reserved: float = 0.0
-    cost_spot: float = 0.0
-    cost_burst: float = 0.0
-    served_vm: float = 0.0
-    served_burst: float = 0.0
-    violations: float = 0.0
-    violations_strict: float = 0.0
-    total_requests: float = 0.0
-    chip_seconds: float = 0.0
-    chip_seconds_needed: float = 0.0
-    chip_seconds_over: float = 0.0
-    timeline: List[dict] = field(default_factory=list)
-
-    preemptions: int = 0
-
-    @property
-    def cost_total(self) -> float:
-        return self.cost_reserved + self.cost_spot + self.cost_burst
-
-    @property
-    def violation_rate(self) -> float:
-        return self.violations / max(self.total_requests, 1e-9)
-
-    @property
-    def overprovision_ratio(self) -> float:
-        """Idle-capacity chip-seconds as a fraction of needed chip-seconds."""
-        return self.chip_seconds_over / max(self.chip_seconds_needed, 1e-9)
-
-    def summary(self) -> dict:
-        return {
-            "cost_total": round(self.cost_total, 4),
-            "cost_reserved": round(self.cost_reserved, 4),
-            "cost_spot": round(self.cost_spot, 4),
-            "cost_burst": round(self.cost_burst, 4),
-            "preemptions": self.preemptions,
-            "violation_rate": round(self.violation_rate, 5),
-            "violations_strict": round(self.violations_strict, 1),
-            "served_vm": round(self.served_vm, 1),
-            "served_burst": round(self.served_burst, 1),
-            "overprovision_ratio": round(self.overprovision_ratio, 4),
-            "chip_seconds": round(self.chip_seconds, 1),
-        }
-
-
-# ---------------------------------------------------------------------------
-# The simulator: stepwise core (RL env drives it tick-by-tick) + the
-# closed-loop ``simulate()`` wrapper used by benchmarks and tests.
-# ---------------------------------------------------------------------------
-class ServingSim:
-    """Stepwise serving simulator: ``observe() -> actions -> apply()``."""
-
-    def __init__(
-        self,
-        trace: np.ndarray,
-        workload: List[ArchLoad],
-        *,
-        pricing: FleetPricing = PRICING,
-        prewarm: bool = True,
-        warm_start: bool = True,
-        seed: int = 0,
-    ):
-        self.trace = trace
-        self.pricing = pricing
-        self.rng = np.random.default_rng(seed)   # spot preemption draws
-        self.states = {w.arch: _ArchState(w, pricing, prewarm) for w in workload}
-        self.res = SimResult()
-        self.tick = 0
-        if warm_start:
-            for st in self.states.values():
-                st.n_active = max(
-                    1, math.ceil(trace[0] * st.load.share / st.throughput)
-                )
-
-    @property
-    def done(self) -> bool:
-        return self.tick >= len(self.trace)
-
-    def observe(self) -> Dict[str, ArchObs]:
-        """Admit this tick's arrivals and return per-arch observations."""
-        tick = self.tick
-        rate = float(self.trace[tick])
-        obs: Dict[str, ArchObs] = {}
-        for arch, st in self.states.items():
-            a_rate = rate * st.load.share
-            st.monitor.observe(a_rate)
-            n_strict = a_rate * st.load.strict_frac
-            st.queues["strict"].push(tick, n_strict)
-            st.queues["relaxed"].push(tick, a_rate - n_strict)
-            self.res.total_requests += a_rate
-            obs[arch] = ArchObs(
-                arch=arch,
-                rate=a_rate,
-                ewma_rate=st.monitor.rate,
-                window_peak=st.monitor.peak,
-                peak_to_median=st.monitor.peak_to_median,
-                queue_len=st.queues["strict"].total + st.queues["relaxed"].total,
-                n_active=st.n_active,
-                n_pending=len(st.pending),
-                n_spot=st.n_spot,
-                throughput=st.throughput,
-                utilization=st.last_util,
-            )
-        self._last_obs = obs
-        return obs
-
-    def apply(self, actions: Dict[str, Action]) -> dict:
-        """Apply procurement actions, serve the tick, advance time.
-
-        Returns this tick's marginal metrics (for RL rewards)."""
-        tick = self.tick
-        res = self.res
-        pricing = self.pricing
-        obs = self._last_obs
-        cost0, viol0 = res.cost_total, res.violations
-        for arch, st in self.states.items():
-            act = actions.get(arch, Action(target=st.n_active))
-
-            # provisioning pipeline
-            ready = [r for r in st.pending if r <= tick]
-            st.n_active += len(ready)
-            st.pending = [r for r in st.pending if r > tick]
-            in_flight = st.n_active + len(st.pending)
-            if act.target > in_flight:
-                st.pending.extend(
-                    [tick + int(pricing.reserved_provision_s)]
-                    * (act.target - in_flight)
-                )
-            elif act.target < in_flight:
-                # cancel not-yet-ready slices first, then release active ones
-                cancel = min(len(st.pending), in_flight - act.target)
-                if cancel:
-                    st.pending = st.pending[: len(st.pending) - cancel]
-                st.n_active = min(st.n_active, max(act.target, 0))
-
-            # --- spot tier (§VI extension): Poisson reclaim, then scale ---
-            if st.n_spot > 0:
-                p_reclaim = 1.0 - math.exp(-pricing.spot_preempt_rate)
-                reclaimed = int(self.rng.binomial(st.n_spot, p_reclaim))
-                if reclaimed:
-                    st.n_spot -= reclaimed
-                    res.preemptions += reclaimed
-            ready_s = [r for r in st.spot_pending if r <= tick]
-            st.n_spot += len(ready_s)
-            st.spot_pending = [r for r in st.spot_pending if r > tick]
-            spot_in_flight = st.n_spot + len(st.spot_pending)
-            if act.spot_target > spot_in_flight:
-                st.spot_pending.extend(
-                    [tick + int(pricing.spot_provision_s)]
-                    * (act.spot_target - spot_in_flight)
-                )
-            elif act.spot_target < spot_in_flight:
-                cancel = min(len(st.spot_pending), spot_in_flight - act.spot_target)
-                if cancel:
-                    st.spot_pending = st.spot_pending[: len(st.spot_pending) - cancel]
-                st.n_spot = min(st.n_spot, max(act.spot_target, 0))
-
-            # serve from queues, strict first
-            capacity = (st.n_active + st.n_spot) * st.throughput
-            served = 0.0
-            for cls in ("strict", "relaxed"):
-                take = st.queues[cls].pop(capacity - served)
-                for t0, cnt in take:
-                    if tick - t0 > st.slack[cls]:
-                        res.violations += cnt
-                        if cls == "strict":
-                            res.violations_strict += cnt
-                    served += cnt
-                    res.served_vm += cnt
-            st.last_util = served / capacity if capacity > 0 else 1.0
-
-            # offload decision: what leaves the queue for burst instances.
-            #   blind       — anything unserved goes now, both classes
-            #                 (MArk/Spock assume one global SLO)
-            #   slack_aware — Paragon: strict queries offload when a VM
-            #                 slot is unavailable; relaxed queries NEVER
-            #                 pay the burst premium ("does not offload to
-            #                 lambdas for relaxed latency queries", §IV-B)
-            if act.offload in ("blind", "slack_aware"):
-                classes = ("strict", "relaxed") if act.offload == "blind" else ("strict",)
-                for cls in classes:
-                    slo = STRICT.slo_s if cls == "strict" else RELAXED.slo_s
-                    offl = st.queues[cls].pop_older_than(tick, -1)
-                    if offl <= 0:
-                        continue
-                    blat = st.burst_latency(tick)
-                    st.burst_last_used = tick
-                    res.cost_burst += st.burst_per_req * offl
-                    res.served_burst += offl
-                    if blat > slo:
-                        res.violations += offl
-                        if cls == "strict":
-                            res.violations_strict += offl
-
-            # abandon hopeless VM-only waiters (count violation once):
-            # anything older than 3x its SLO is recorded and dropped so
-            # queues cannot grow without bound under sustained shortfall.
-            for cls in ("strict", "relaxed"):
-                slo = STRICT.slo_s if cls == "strict" else RELAXED.slo_s
-                dropped = st.queues[cls].pop_older_than(tick, int(3 * slo))
-                if dropped > 0:
-                    res.violations += dropped
-                    if cls == "strict":
-                        res.violations_strict += dropped
-                    res.served_vm += dropped   # still answered, just very late
-
-            # accounting
-            chips = st.n_active * st.prof.chips
-            spot_chips = st.n_spot * st.prof.chips
-            res.cost_reserved += chips * pricing.reserved_chip_s
-            res.cost_spot += (
-                spot_chips * pricing.reserved_chip_s * pricing.spot_discount
-            )
-            res.chip_seconds += chips + spot_chips
-            need = math.ceil(obs[arch].rate / st.throughput) * st.prof.chips
-            res.chip_seconds_needed += need
-            res.chip_seconds_over += max(0, chips + spot_chips - need)
-
-        self.tick += 1
-        if self.done:
-            self._finalize()
-        return {
-            "cost": res.cost_total - cost0,
-            "violations": res.violations - viol0,
-        }
-
-    def _finalize(self) -> None:
-        # end-of-trace: whatever is still queued past its slack violates
-        for st in self.states.values():
-            for cls in ("strict", "relaxed"):
-                late = st.queues[cls].pop_older_than(len(self.trace), st.slack[cls])
-                self.res.violations += late
-                if cls == "strict":
-                    self.res.violations_strict += late
-
-    def snapshot(self) -> dict:
-        return {
-            "t": self.tick,
-            "rate": float(self.trace[min(self.tick, len(self.trace) - 1)]),
-            "active": {a: s.n_active for a, s in self.states.items()},
-            "queued": {
-                a: s.queues["strict"].total + s.queues["relaxed"].total
-                for a, s in self.states.items()
-            },
-        }
-
-
-def simulate(
-    trace: np.ndarray,                       # per-second arrival rate (req/s)
-    workload: List[ArchLoad],
-    policy: Policy,
-    *,
-    pricing: FleetPricing = PRICING,
-    prewarm: bool = True,
-    warm_start: bool = True,                 # fleet starts sized for t=0 load
-    record_timeline: bool = False,
-) -> SimResult:
-    """Closed-loop run: the policy drives ``ServingSim`` over the trace."""
-    sim = ServingSim(
-        trace, workload, pricing=pricing, prewarm=prewarm, warm_start=warm_start
-    )
-    while not sim.done:
-        obs = sim.observe()
-        actions = policy(sim.tick, obs)
-        if record_timeline:
-            sim.res.timeline.append(sim.snapshot())
-        sim.apply(actions)
-    return sim.res
+# seed-era private name for the scalar queue, kept so old imports of
+# ``repro.core.simulator._Queue`` keep resolving
+_Queue = BucketQueue

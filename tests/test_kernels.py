@@ -170,27 +170,5 @@ def test_rglru_assoc_matches_sequential():
     assert float(jnp.max(jnp.abs(gT - eT))) < 1e-5
 
 
-# ---------------------------------------------------------------------------
-# Blocked sliding-window attention (XLA §Perf path) — property test.
-# ---------------------------------------------------------------------------
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
-
-@given(
-    s=st.integers(20, 120),
-    window=st.sampled_from([4, 8, 16]),
-    nq=st.sampled_from([2, 4]),
-    group=st.sampled_from([1, 2]),
-)
-@settings(max_examples=12, deadline=None)
-def test_blocked_window_equals_masked_oracle(s, window, nq, group):
-    nkv = max(1, nq // group)
-    hd = 16
-    key = jax.random.fold_in(KEY, s * 131 + window * 7 + nq)
-    ks = jax.random.split(key, 3)
-    q = jax.random.normal(ks[0], (1, s, nq, hd))
-    k = jax.random.normal(ks[1], (1, s, nkv, hd))
-    v = jax.random.normal(ks[2], (1, s, nkv, hd))
-    got = ref.local_attention_blocked(q, k, v, window=window)
-    exp = ref.mha_reference(q, k, v, causal=True, window=window)
-    assert float(jnp.max(jnp.abs(got - exp))) < 1e-5
+# (test_blocked_window_equals_masked_oracle — the hypothesis property test
+# for the blocked sliding-window path — moved to test_properties.py)

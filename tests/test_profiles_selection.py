@@ -1,6 +1,6 @@
-"""Profile table + model selection: invariants and paper properties."""
+"""Profile table + model selection: invariants and paper properties
+(deterministic; the hypothesis property tests live in test_properties.py)."""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import list_architectures
 from repro.core.model_selection import (
@@ -95,35 +95,8 @@ def test_iso_sets():
 # ---------------------------------------------------------------------------
 # Selection properties.
 # ---------------------------------------------------------------------------
-@given(
-    acc=st.floats(0.0, 0.9),
-    lat=st.floats(0.05, 3.0),
-)
-@settings(max_examples=100, deadline=None)
-def test_paragon_never_costlier_than_naive(acc, lat):
-    c = Constraint(min_accuracy=acc, max_latency_s=lat)
-    pool = model_pool()
-    try:
-        n = select_naive(c)
-    except NoFeasibleModel:
-        return
-    try:
-        p = select_paragon(c)
-    except NoFeasibleModel:
-        return
-    assert pool[p]["cost_per_1k"] <= pool[n]["cost_per_1k"] + 1e-12
-
-
-@given(acc=st.floats(0.0, 0.87), lat=st.floats(0.05, 3.0))
-@settings(max_examples=100, deadline=None)
-def test_paragon_meets_both_constraints(acc, lat):
-    c = Constraint(min_accuracy=acc, max_latency_s=lat)
-    if not feasible_set(c):
-        return
-    pool = model_pool()
-    p = select_paragon(c)
-    assert pool[p]["accuracy"] >= acc
-    assert pool[p]["latency_s"] <= lat
+# (test_paragon_never_costlier_than_naive / test_paragon_meets_both_constraints
+# — the hypothesis property tests — moved to test_properties.py)
 
 
 def test_selection_raises_when_infeasible():

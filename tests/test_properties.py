@@ -1,0 +1,190 @@
+"""Hypothesis property tests, consolidated.
+
+These are the randomized-property halves of test_simulator / test_units /
+test_kernels / test_profiles_selection.  They live in one module behind
+``importorskip`` so the rest of the suite still collects on environments
+without ``hypothesis`` (it is a dev-only dependency — see
+requirements-dev.txt); CI installs it and runs everything here.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.load_monitor import LoadMonitor  # noqa: E402
+from repro.core.model_selection import (  # noqa: E402
+    Constraint,
+    NoFeasibleModel,
+    feasible_set,
+    select_naive,
+    select_paragon,
+)
+from repro.core.profiles import model_pool  # noqa: E402
+from repro.core.sim.queues import BucketQueue, QueueArray  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# BucketQueue properties (the scalar reference queue).
+# ---------------------------------------------------------------------------
+@given(
+    pushes=st.lists(
+        st.tuples(st.integers(0, 50), st.floats(0.0, 100.0)), max_size=30
+    ),
+    amount=st.floats(0.0, 2000.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_queue_pop_conserves_mass(pushes, amount):
+    q = BucketQueue()
+    total = 0.0
+    for tick, count in sorted(pushes):
+        q.push(tick, count)
+        total += count if count > 0 else 0.0
+    popped = q.pop(amount)
+    popped_mass = sum(c for _, c in popped)
+    assert popped_mass <= min(amount, total) + 1e-6
+    assert abs(popped_mass + q.total - total) < 1e-6
+
+
+@given(
+    pushes=st.lists(
+        st.tuples(st.integers(0, 50), st.floats(0.1, 10.0)),
+        min_size=1, max_size=20,
+    )
+)
+@settings(max_examples=200, deadline=None)
+def test_queue_fifo_order(pushes):
+    q = BucketQueue()
+    for tick, count in sorted(pushes):
+        q.push(tick, count)
+    out = q.pop(1e9)
+    ticks = [t for t, _ in out]
+    assert ticks == sorted(ticks)
+
+
+@given(
+    now=st.integers(10, 100),
+    max_age=st.integers(0, 20),
+    pushes=st.lists(st.tuples(st.integers(0, 100), st.floats(0.1, 5.0)), max_size=20),
+)
+@settings(max_examples=200, deadline=None)
+def test_queue_pop_older_than(now, max_age, pushes):
+    q = BucketQueue()
+    expected_old = 0.0
+    for tick, count in sorted(pushes):
+        q.push(tick, count)
+        if now - tick > max_age:
+            expected_old += count
+    got = q.pop_older_than(now, max_age)
+    assert abs(got - expected_old) < 1e-6
+    # everything remaining is young enough
+    for t0, _ in q.buckets:
+        assert now - t0 <= max_age
+
+
+# ---------------------------------------------------------------------------
+# QueueArray vs BucketQueue: the vectorized pool queue serves identically.
+# ---------------------------------------------------------------------------
+@given(
+    arrivals=st.lists(st.floats(0.0, 20.0), min_size=1, max_size=40),
+    capacity=st.floats(0.0, 15.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_queue_array_matches_bucket_queue(arrivals, capacity):
+    qa = QueueArray(2, slo_s=2.0, slack=np.array([1, 1]))
+    qb = BucketQueue()
+    served_a = late_a = served_b = late_b = 0.0
+    for tick, n in enumerate(arrivals):
+        qa.push(tick, np.array([n, 0.0]))
+        qb.push(tick, n)
+        s, l = qa.serve(tick, np.array([capacity, 0.0]))
+        served_a += float(s[0])
+        late_a += float(l[0])
+        for t0, cnt in qb.pop(capacity):
+            served_b += cnt
+            late_b += cnt if tick - t0 > 1 else 0.0
+        d = qa.drop_expired(tick)
+        dropped_b = qb.pop_older_than(tick, qa.drop_age)
+        assert float(d[0]) == pytest.approx(dropped_b, abs=1e-6)
+        served_a += float(d[0])
+        served_b += dropped_b
+    assert served_a == pytest.approx(served_b, abs=1e-6)
+    assert late_a == pytest.approx(late_b, abs=1e-6)
+    assert float(qa.totals()[0]) == pytest.approx(qb.total, abs=1e-6)
+    assert float(qa.totals()[1]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# LoadMonitor.
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(0.1, 1000.0), min_size=1, max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_monitor_peak_bounds_median(rates):
+    m = LoadMonitor(window_s=50)
+    for r in rates:
+        m.observe(r)
+    assert m.peak >= m.median > 0
+    assert m.peak_to_median >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Blocked sliding-window attention (XLA §Perf path).
+# ---------------------------------------------------------------------------
+@given(
+    s=st.integers(20, 120),
+    window=st.sampled_from([4, 8, 16]),
+    nq=st.sampled_from([2, 4]),
+    group=st.sampled_from([1, 2]),
+)
+@settings(max_examples=12, deadline=None)
+def test_blocked_window_equals_masked_oracle(s, window, nq, group):
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    nkv = max(1, nq // group)
+    hd = 16
+    key = jax.random.fold_in(jax.random.key(0), s * 131 + window * 7 + nq)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, s, nq, hd))
+    k = jax.random.normal(ks[1], (1, s, nkv, hd))
+    v = jax.random.normal(ks[2], (1, s, nkv, hd))
+    got = ref.local_attention_blocked(q, k, v, window=window)
+    exp = ref.mha_reference(q, k, v, causal=True, window=window)
+    assert float(jnp.max(jnp.abs(got - exp))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Selection properties.
+# ---------------------------------------------------------------------------
+@given(
+    acc=st.floats(0.0, 0.9),
+    lat=st.floats(0.05, 3.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_paragon_never_costlier_than_naive(acc, lat):
+    c = Constraint(min_accuracy=acc, max_latency_s=lat)
+    pool = model_pool()
+    try:
+        n = select_naive(c)
+    except NoFeasibleModel:
+        return
+    try:
+        p = select_paragon(c)
+    except NoFeasibleModel:
+        return
+    assert pool[p]["cost_per_1k"] <= pool[n]["cost_per_1k"] + 1e-12
+
+
+@given(acc=st.floats(0.0, 0.87), lat=st.floats(0.05, 3.0))
+@settings(max_examples=100, deadline=None)
+def test_paragon_meets_both_constraints(acc, lat):
+    c = Constraint(min_accuracy=acc, max_latency_s=lat)
+    if not feasible_set(c):
+        return
+    pool = model_pool()
+    p = select_paragon(c)
+    assert pool[p]["accuracy"] >= acc
+    assert pool[p]["latency_s"] <= lat

@@ -11,8 +11,11 @@ from repro.distributed.sharding import AxisRules, axis_rules, logical_to_spec
 from repro.launch.mesh import make_rules
 from repro.launch.specs import build_step
 
-PROD_MESH = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
-POD_MESH = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# AbstractMesh takes (name, size) pairs since jax 0.4.36
+PROD_MESH = jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
+POD_MESH = jax.sharding.AbstractMesh(
+    (("pod", 2), ("data", 16), ("model", 16))
+)
 
 
 def test_logical_to_spec_basic():

@@ -1,0 +1,205 @@
+"""The refactored sim package: golden equivalence against the seed
+per-arch loop, conservation on the vectorized queues, tier mechanics,
+and the vectorized policy interface."""
+import numpy as np
+import pytest
+
+from repro.core.hardware import PRICING
+from repro.core.schedulers import SCHEDULERS, VECTOR_SCHEDULERS
+from repro.core.sim import (
+    Action,
+    ArchLoad,
+    PoolAction,
+    ProvisionPipeline,
+    QueueArray,
+    ServingSim,
+    simulate,
+    simulate_reference,
+    replicate_pool,
+    uniform_pool_workload,
+)
+from repro.core.traces import get_trace
+
+SEED_ARCHS = ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b"]
+
+
+def _summaries_close(a: dict, b: dict, tol=1e-6):
+    for k in a:
+        assert abs(a[k] - b[k]) <= tol * max(1.0, abs(a[k])), (
+            f"{k}: reference={a[k]} engine={b[k]}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: the vectorized engine reproduces the seed loop.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "policy", ["reactive", "util_aware", "exascale", "mixed", "paragon"]
+)
+def test_golden_equivalence_4arch(policy):
+    """On the 4-arch seed workload the engine must reproduce the seed
+    simulator's SimResult.summary() (spot policies excluded: the engine
+    draws reclaims vectorized, so the RNG streams differ by design)."""
+    trace = get_trace("berkeley", 400, mean_rps=120)
+    wl = uniform_pool_workload(SEED_ARCHS, strict_frac=0.25)
+    ref = simulate_reference(trace, wl, SCHEDULERS[policy]())
+    got = simulate(trace, wl, SCHEDULERS[policy]())
+    _summaries_close(ref.summary(), got.summary())
+
+
+def test_golden_equivalence_premium_pricing_and_trace():
+    import dataclasses
+
+    pricing = dataclasses.replace(PRICING, burst_premium=8.0)
+    trace = get_trace("twitter", 600, mean_rps=80)
+    wl = uniform_pool_workload(SEED_ARCHS, strict_frac=0.5)
+    ref = simulate_reference(trace, wl, SCHEDULERS["mixed"](), pricing=pricing)
+    got = simulate(trace, wl, SCHEDULERS["mixed"](), pricing=pricing)
+    _summaries_close(ref.summary(), got.summary())
+
+
+def test_golden_equivalence_stepwise_default_action():
+    """Missing per-arch actions default to 'hold the active fleet' in
+    both implementations."""
+    from repro.core.sim import ReferenceSim
+
+    trace = get_trace("wiki", 120, mean_rps=30)
+    wl = [ArchLoad("qwen1.5-0.5b", 1.0, 0.5), ArchLoad("minicpm-2b", 0.0, 0.5)]
+    ref, new = ReferenceSim(trace, wl), ServingSim(trace, wl)
+    while not new.done:
+        ref.observe()
+        new.observe()
+        acts = {"qwen1.5-0.5b": Action(target=2, offload="blind")}
+        m_ref = ref.apply(acts)
+        m_new = new.apply(acts)
+        assert m_new["cost"] == pytest.approx(m_ref["cost"], abs=1e-9)
+        assert m_new["violations"] == pytest.approx(m_ref["violations"], abs=1e-9)
+    _summaries_close(ref.res.summary(), new.res.summary())
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_golden_equivalence_adversarial_actions(seed):
+    """Differential fuzz: random procurement/offload actions under edge
+    pricing (short pipelines, tiny burst idle timeout) must keep engine
+    and reference in lockstep — guards the burst warm/cold state against
+    float residue in the vectorized queues."""
+    import dataclasses
+
+    from repro.core.sim import ReferenceSim
+
+    pricing = dataclasses.replace(
+        PRICING, reserved_provision_s=7, spot_provision_s=3,
+        burst_idle_timeout_s=5,
+    )
+    rng = np.random.default_rng(seed)
+    trace = get_trace("berkeley", 120, mean_rps=25, seed=seed)
+    wl = [ArchLoad("llama3-8b", 0.6, 0.3), ArchLoad("minicpm-2b", 0.4, 0.7)]
+    new = ServingSim(trace, wl, pricing=pricing, prewarm=False)
+    ref = ReferenceSim(trace, wl, pricing=pricing, prewarm=False)
+    while not new.done:
+        new.observe()
+        ref.observe()
+        acts = {
+            w.arch: Action(
+                target=int(rng.integers(0, 4)),
+                offload=["none", "blind", "slack_aware"][rng.integers(0, 3)],
+            )
+            for w in wl
+        }
+        m_new, m_ref = new.apply(acts), ref.apply(acts)
+        assert m_new["violations"] == pytest.approx(
+            m_ref["violations"], abs=1e-6
+        ), f"tick {ref.tick}"
+    _summaries_close(ref.res.summary(), new.res.summary())
+
+
+# ---------------------------------------------------------------------------
+# Conservation on the vectorized queues.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["reactive", "mixed", "paragon"])
+def test_engine_conservation_every_tick(policy):
+    """admitted == served_vm + served_burst + still-queued, every tick."""
+    trace = get_trace("berkeley", 300, mean_rps=90)
+    wl = uniform_pool_workload(SEED_ARCHS, strict_frac=0.25)
+    sim = ServingSim(trace, wl)
+    pol = SCHEDULERS[policy]()
+    while not sim.done:
+        obs = sim.observe()
+        sim.apply(pol(sim.tick, obs))
+        queued = float(sim.q_strict.totals().sum() + sim.q_relaxed.totals().sum())
+        res = sim.res
+        assert res.total_requests == pytest.approx(
+            res.served_vm + res.served_burst + queued, abs=1e-6
+        )
+        assert queued >= -1e-9
+
+
+def test_queue_array_tracked_totals_match_buffer():
+    rng = np.random.default_rng(3)
+    q = QueueArray(3, slo_s=2.0, slack=np.array([0, 1, 2]))
+    for tick in range(50):
+        q.push(tick, rng.uniform(0, 5, size=3))
+        q.serve(tick, rng.uniform(0, 4, size=3))
+        if tick % 7 == 0:
+            q.drain(np.array([False, True, False]))
+        q.drop_expired(tick)
+        np.testing.assert_allclose(q.totals(), q.buf.sum(axis=1), atol=1e-9)
+    assert (q.totals() >= -1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# Fleet tier mechanics.
+# ---------------------------------------------------------------------------
+def test_pipeline_fixed_latency():
+    p = ProvisionPipeline(2, latency_s=3.0)
+    p.launch(0, np.array([2, 0]))
+    assert (p.pop_ready(1) == 0).all()
+    assert (p.pop_ready(2) == 0).all()
+    np.testing.assert_array_equal(p.pop_ready(3), [2, 0])
+    assert (p.total == 0).all()
+
+
+def test_pipeline_cancel_newest_first():
+    p = ProvisionPipeline(1, latency_s=5.0)
+    p.launch(0, np.array([2]))      # ready at 5
+    p.launch(2, np.array([3]))      # ready at 7
+    p.cancel_newest(2, np.array([3]))   # kills the tick-2 batch only
+    np.testing.assert_array_equal(p.pop_ready(5), [2])
+    assert (p.pop_ready(7) == 0).all()
+
+
+def test_spot_unused_costs_nothing():
+    trace = get_trace("berkeley", 200, mean_rps=60)
+    wl = uniform_pool_workload(SEED_ARCHS[:2], strict_frac=0.25)
+    res = simulate(trace, wl, SCHEDULERS["paragon"]())
+    assert res.cost_spot == 0.0 and res.preemptions == 0
+
+
+# ---------------------------------------------------------------------------
+# Vectorized policy interface.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", sorted(VECTOR_SCHEDULERS))
+def test_vector_policy_matches_dict_policy(policy):
+    trace = get_trace("berkeley", 400, mean_rps=90)
+    wl = uniform_pool_workload(SEED_ARCHS, strict_frac=0.25)
+    d = simulate(trace, wl, SCHEDULERS[policy]()).summary()
+    v = simulate(trace, wl, VECTOR_SCHEDULERS[policy]()).summary()
+    assert d == v
+
+
+def test_replicated_pool_keys_and_scaling():
+    """replicate_pool gives unique keys; a 16-way replicated pool sees
+    the same total demand as the 4-arch pool it cycles."""
+    wl = replicate_pool(SEED_ARCHS, 16, strict_frac=0.25)
+    assert len({w.key for w in wl}) == 16
+    assert sum(w.share for w in wl) == pytest.approx(1.0)
+    trace = get_trace("wiki", 200, mean_rps=80)
+    res = simulate(trace, wl, VECTOR_SCHEDULERS["paragon"]())
+    assert res.total_requests == pytest.approx(float(trace.sum()))
+    assert res.violation_rate < 0.5
+
+
+def test_pool_action_defaults():
+    a = PoolAction(target=np.array([1, 2]))
+    assert (a.offload_codes(2) == 0).all()
+    assert (a.spot_targets(2) == 0).all()

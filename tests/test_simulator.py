@@ -1,16 +1,15 @@
-"""Simulator + scheduler invariants (unit + hypothesis property tests)."""
+"""Simulator + scheduler invariants (deterministic; the hypothesis
+property tests live in test_properties.py)."""
 import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.hardware import PRICING
-from repro.core.simulator import (
+from repro.core.sim import (
     Action,
     ArchLoad,
     ServingSim,
-    _Queue,
     simulate,
     uniform_pool_workload,
 )
@@ -19,64 +18,6 @@ from repro.core.traces import get_trace
 
 # low per-instance throughput -> flash crowds actually produce shortfalls
 SMALL_ARCHS = ["llama3-8b", "minicpm-2b"]
-
-
-# ---------------------------------------------------------------------------
-# _Queue properties.
-# ---------------------------------------------------------------------------
-@given(
-    pushes=st.lists(
-        st.tuples(st.integers(0, 50), st.floats(0.0, 100.0)), max_size=30
-    ),
-    amount=st.floats(0.0, 2000.0),
-)
-@settings(max_examples=200, deadline=None)
-def test_queue_pop_conserves_mass(pushes, amount):
-    q = _Queue()
-    total = 0.0
-    for tick, count in sorted(pushes):
-        q.push(tick, count)
-        total += count if count > 0 else 0.0
-    popped = q.pop(amount)
-    popped_mass = sum(c for _, c in popped)
-    assert popped_mass <= min(amount, total) + 1e-6
-    assert abs(popped_mass + q.total - total) < 1e-6
-
-
-@given(
-    pushes=st.lists(
-        st.tuples(st.integers(0, 50), st.floats(0.1, 10.0)),
-        min_size=1, max_size=20,
-    )
-)
-@settings(max_examples=200, deadline=None)
-def test_queue_fifo_order(pushes):
-    q = _Queue()
-    for tick, count in sorted(pushes):
-        q.push(tick, count)
-    out = q.pop(1e9)
-    ticks = [t for t, _ in out]
-    assert ticks == sorted(ticks)
-
-
-@given(
-    now=st.integers(10, 100),
-    max_age=st.integers(0, 20),
-    pushes=st.lists(st.tuples(st.integers(0, 100), st.floats(0.1, 5.0)), max_size=20),
-)
-@settings(max_examples=200, deadline=None)
-def test_queue_pop_older_than(now, max_age, pushes):
-    q = _Queue()
-    expected_old = 0.0
-    for tick, count in sorted(pushes):
-        q.push(tick, count)
-        if now - tick > max_age:
-            expected_old += count
-    got = q.pop_older_than(now, max_age)
-    assert abs(got - expected_old) < 1e-6
-    # everything remaining is young enough
-    for t0, _ in q.buckets:
-        assert now - t0 <= max_age
 
 
 # ---------------------------------------------------------------------------

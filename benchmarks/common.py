@@ -32,10 +32,18 @@ MEAN_RPS = 400.0
 DURATION_S = 3600
 STRICT_FRAC = 0.25
 
+# BENCH_SMALL=1 shrinks trace lengths / pool sizes so CI can smoke-run
+# benchmark entrypoints in seconds (claims still evaluated, just on the
+# small configuration)
+BENCH_SMALL = os.environ.get("BENCH_SMALL", "") == "1"
+
 Row = Tuple[str, float, str, bool]
 
 
 def write_artifact(name: str, payload: Any) -> str:
+    # small smoke runs must not clobber the committed full-run artifacts
+    if BENCH_SMALL:
+        name = f"{name}_small"
     os.makedirs(os.path.abspath(ARTIFACTS), exist_ok=True)
     path = os.path.join(os.path.abspath(ARTIFACTS), f"{name}.json")
     with open(path, "w") as f:

@@ -21,6 +21,7 @@ from benchmarks import (
     fig9_paragon,
     rl_vs_schemes,
     roofline,
+    scenario_grid,
     sim_throughput,
     spot_tier,
 )
@@ -35,6 +36,7 @@ BENCHES = {
     "rl": rl_vs_schemes.run,
     "spot": spot_tier.run,
     "roofline": roofline.run,
+    "scenario_grid": scenario_grid.run,
     "sim_throughput": sim_throughput.run,
 }
 

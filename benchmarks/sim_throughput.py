@@ -14,14 +14,20 @@ from __future__ import annotations
 import time
 from typing import List
 
-from benchmarks.common import Row, SERVING_POOL, print_rows, write_artifact
+from benchmarks.common import (
+    BENCH_SMALL,
+    Row,
+    SERVING_POOL,
+    print_rows,
+    write_artifact,
+)
 from repro.core.schedulers import SCHEDULERS, VECTOR_SCHEDULERS
 from repro.core.sim import replicate_pool, simulate, simulate_reference
 from repro.core.traces import get_trace
 
 POOL_SIZES = (4, 16, 64)
-DAY_TICKS = 86_400
-BASELINE_TICKS = 1_000       # seed loop is ~200x slower; extrapolate from this
+DAY_TICKS = 7_200 if BENCH_SMALL else 86_400
+BASELINE_TICKS = 300 if BENCH_SMALL else 1_000
 MEAN_RPS = 400.0
 STRICT_FRAC = 0.25
 
@@ -65,7 +71,7 @@ def run() -> bool:
     rows: List[Row] = [
         (
             f"engine_ticks_per_s_{n}", payload["pool_sizes"][str(n)]["ticks_per_s"],
-            "vectorized engine, 24h trace", True,
+            f"vectorized engine, {DAY_TICKS}-tick trace", True,
         )
         for n in POOL_SIZES
     ]
@@ -74,7 +80,7 @@ def run() -> bool:
     ))
     rows.append((
         "speedup_64arch_day", speedup,
-        "64-arch 86400-tick pool >= 10x faster than the seed loop",
+        f"64-arch {DAY_TICKS}-tick pool >= 10x faster than the seed loop",
         speedup >= 10.0,
     ))
 

@@ -8,12 +8,15 @@ Layers:
   sim              — trace-driven serving simulation package: vectorized
                      queues, resource tiers (reserved/spot/burst), ledger,
                      and the tick engine (simulator.py is a compat shim)
+  workloads        — heterogeneous per-arch arrival matrices: scenario
+                     generators (diurnal / flash crowds / MMPP / hotswap)
+                     and the declarative seeded Scenario spec
   schedulers       — reactive / util_aware / exascale / mixed / paragon
   model_selection  — naive vs paragon (least-cost under constraints)
   rl               — PPO controller (§V, implemented beyond the paper)
 """
 from repro.core.hardware import PRICING, V5E, ChipSpec, FleetPricing  # noqa: F401
-from repro.core.load_monitor import LoadMonitor  # noqa: F401
+from repro.core.load_monitor import LoadMonitor, PoolLoadMonitor  # noqa: F401
 from repro.core.model_selection import (  # noqa: F401
     Constraint,
     select_naive,
@@ -41,3 +44,9 @@ from repro.core.sim import (  # noqa: F401
     uniform_pool_workload,
 )
 from repro.core.traces import TRACES, get_trace, peak_to_median, trace_stats  # noqa: F401
+from repro.core.workloads import (  # noqa: F401
+    SCENARIO_ZOO,
+    Scenario,
+    from_pool_trace,
+    get_scenario,
+)

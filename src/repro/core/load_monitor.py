@@ -4,6 +4,17 @@ Watches the arrival stream in sliding sampling windows and exposes the
 statistics the procurement policies plug into: smoothed rate (EWMA),
 windowed peak, and the peak-to-median ratio that Observation 4 says
 predicts whether mixed procurement pays off.
+
+Two implementations of the same contract:
+
+:class:`LoadMonitor`
+    The seed scalar monitor — one arrival stream, a deque window.
+
+:class:`PoolLoadMonitor`
+    The vectorized streaming counterpart for heterogeneous per-arch
+    arrival matrices: every arch keeps its own EWMA and sliding window
+    as one ``[A, W]`` ring buffer, so a pool-wide observation is O(A*W)
+    NumPy work per tick with no per-arch Python.
 """
 from __future__ import annotations
 
@@ -53,3 +64,80 @@ class LoadMonitor:
     def bursty(self, threshold: float = 1.5) -> bool:
         """True when the window shows spike structure worth offloading."""
         return len(self._hist) >= self.window_s // 4 and self.peak_to_median >= threshold
+
+
+class PoolLoadMonitor:
+    """Per-arch load statistics over a pool, vectorized and streaming.
+
+    Semantically one :class:`LoadMonitor` per architecture, but all A
+    windows live in a single ``[A, W]`` ring buffer and every statistic
+    is one NumPy reduction over it.  Built for heterogeneous arrival
+    matrices (:mod:`repro.core.workloads`), where each arch's stream has
+    its own burst structure and the share-invariant trick the engine
+    uses for a single pool trace (every arch = share x pool) no longer
+    holds.
+
+    The first ``window_s - 1`` ticks use growing windows, matching
+    :class:`LoadMonitor`'s filling deque.
+    """
+
+    def __init__(self, n_archs: int, window_s: int = LoadMonitor.window_s,
+                 ewma_alpha: float = LoadMonitor.ewma_alpha):
+        self.window_s = int(window_s)
+        self.ewma_alpha = float(ewma_alpha)
+        self.buf = np.zeros((n_archs, self.window_s), dtype=np.float64)
+        self.ewma = np.zeros(n_archs, dtype=np.float64)
+        self._seen = 0
+
+    @property
+    def filled(self) -> int:
+        """How many window columns hold real observations."""
+        return min(self._seen, self.window_s)
+
+    def observe(self, rates: np.ndarray) -> None:
+        """Record one tick's per-arch arrival rates (``rates[a]``)."""
+        rates = np.asarray(rates, dtype=np.float64)
+        self.buf[:, self._seen % self.window_s] = rates
+        self.ewma = (
+            rates.copy() if self._seen == 0
+            else self.ewma_alpha * rates + (1 - self.ewma_alpha) * self.ewma
+        )
+        self._seen += 1
+
+    @property
+    def rate(self) -> np.ndarray:
+        """Smoothed per-arch arrival rate (req/s), ``[A]``."""
+        return self.ewma
+
+    @property
+    def peak(self) -> np.ndarray:
+        f = self.filled
+        if f == 0:
+            return np.zeros(self.buf.shape[0])
+        return self.buf[:, :f].max(axis=1)
+
+    @property
+    def median(self) -> np.ndarray:
+        f = self.filled
+        if f == 0:
+            return np.zeros(self.buf.shape[0])
+        return np.median(self.buf[:, :f], axis=1)
+
+    def stats(self) -> tuple:
+        """One-pass snapshot ``(ewma, peak, median, peak_to_median)``,
+        each ``[A]`` — what a per-tick consumer (the engine) wants,
+        computing the window reductions exactly once."""
+        peak, med = self.peak, self.median
+        p2m = np.where(med > 0, peak / np.where(med > 0, med, 1.0), 1.0)
+        return self.ewma, peak, med, p2m
+
+    @property
+    def peak_to_median(self) -> np.ndarray:
+        """Observation-4 statistic per arch, ``[A]``."""
+        return self.stats()[3]
+
+    def bursty(self, threshold: float = 1.5) -> np.ndarray:
+        """Boolean ``[A]``: archs whose window shows spike structure."""
+        if self.filled < self.window_s // 4:
+            return np.zeros(self.buf.shape[0], dtype=bool)
+        return self.peak_to_median >= threshold

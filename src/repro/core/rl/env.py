@@ -9,6 +9,11 @@ Observation (per tick, single-arch fleet, normalized):
   [rate, ewma, peak/median, queue_strict, queue_relaxed,
    n_active, n_pending, utilization, trend]
 
+Workloads: a fixed trace (seed behavior) or a pool of
+:class:`~repro.core.workloads.Scenario` specs sampled per episode, so
+the controller generalizes across heterogeneous load shapes instead of
+overfitting one arrival sequence.
+
 Action space (discrete, 4 headrooms x 3 offload modes = 12):
   headroom in {0.85, 1.0, 1.15, 1.4} — reserved target is
       ceil(headroom x demand / per-instance-throughput), where demand
@@ -22,12 +27,13 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.hardware import PRICING, FleetPricing
 from repro.core.sim import Action, ArchLoad, ServingSim
+from repro.core.workloads import Scenario
 
 HEADROOMS = (0.85, 1.0, 1.15, 1.4)
 OFFLOADS = ("none", "blind", "slack_aware")
@@ -49,19 +55,57 @@ class EnvConfig:
 
 
 class ServingEnv:
-    """Gym-like wrapper over :class:`ServingSim` for a single-arch fleet."""
+    """Gym-like wrapper over :class:`ServingSim` for a single-arch fleet.
 
-    def __init__(self, cfg: EnvConfig, trace: np.ndarray):
+    Two workload sources:
+
+    * a fixed ``trace`` — every episode replays the same arrivals (the
+      seed behavior, still what the deterministic eval harness wants);
+    * ``scenarios`` — a pool of :class:`~repro.core.workloads.Scenario`
+      specs; each ``reset()`` samples one and builds a *fresh seeded
+      realization* of it, so the controller trains across heterogeneous
+      load shapes instead of memorizing one trace.  Sampling is driven
+      by ``scenario_seed`` and an episode counter: deterministic overall,
+      different every episode.
+    """
+
+    def __init__(self, cfg: EnvConfig, trace: Optional[np.ndarray] = None, *,
+                 scenarios: Optional[Sequence[Scenario]] = None,
+                 scenario_seed: int = 0):
+        assert trace is not None or scenarios, (
+            "ServingEnv needs a fixed trace or a scenario pool"
+        )
         self.cfg = cfg
         self.base_trace = trace
+        self.scenarios = tuple(scenarios) if scenarios else ()
+        self._scenario_rng = np.random.default_rng(scenario_seed)
+        self._episode = 0
+        self.last_scenario: Optional[Scenario] = None
         self.sim: Optional[ServingSim] = None
         self._target = 1
         self._prev_rate = 0.0
         self._last_violations = 0.0
 
     # ------------------------------------------------------------------
+    def _sample_arrivals(self) -> np.ndarray:
+        """One episode's arrivals: ``[1, T]`` from a sampled scenario."""
+        sc = self.scenarios[self._scenario_rng.integers(len(self.scenarios))]
+        self.last_scenario = sc
+        self._episode += 1
+        return sc.build(
+            1,
+            seed=sc.seed + self._episode,
+            duration_s=self.cfg.duration_s,
+            mean_rps=self.cfg.mean_rps,
+        )
+
     def reset(self, trace: Optional[np.ndarray] = None) -> np.ndarray:
-        tr = self.base_trace if trace is None else trace
+        if trace is not None:
+            tr = trace
+        elif self.scenarios:
+            tr = self._sample_arrivals()
+        else:
+            tr = self.base_trace
         self.sim = ServingSim(
             tr,
             [ArchLoad(self.cfg.arch, 1.0, self.cfg.strict_frac)],
@@ -69,7 +113,8 @@ class ServingEnv:
         )
         st = next(iter(self.sim.states.values()))
         self._target = st.n_active
-        self._prev_rate = float(tr[0])
+        arr = np.asarray(tr, dtype=np.float64)
+        self._prev_rate = float(arr[:, 0].sum() if arr.ndim == 2 else arr[0])
         self._last_violations = 0.0
         return self._obs_vector(self.sim.observe())
 

@@ -23,6 +23,7 @@ from typing import Dict
 import numpy as np
 
 from repro.core.sim import (
+    OFFLOAD_BLIND,
     OFFLOAD_SLACK_AWARE,
     Action,
     ArchObs,
@@ -235,7 +236,106 @@ class VectorParagonPolicy:
         )
 
 
+@dataclass
+class VectorUtilAwarePolicy:
+    """Vector form of :class:`UtilAwarePolicy`: the per-arch target /
+    cooldown dicts become ``[A]`` arrays initialized on the first call."""
+
+    vectorized = True
+    util_target: float = 0.8
+    scale_down_util: float = 0.4
+    up_cooldown_s: int = 30
+    down_cooldown_s: int = 120
+    _targets: np.ndarray = None
+    _last_up: np.ndarray = None
+    _last_down: np.ndarray = None
+
+    def __call__(self, tick: int, obs: PoolObs) -> PoolAction:
+        n = len(obs.keys)
+        if self._targets is None:
+            self._targets = np.maximum(obs.n_active + obs.n_pending, 1).astype(
+                np.int64
+            )
+            self._last_up = np.full(n, -10**9, dtype=np.int64)
+            self._last_down = np.full(n, -10**9, dtype=np.int64)
+        cur = self._targets
+        up = (obs.utilization > self.util_target) & (
+            tick - self._last_up >= self.up_cooldown_s
+        )
+        down = (
+            ~up
+            & (obs.utilization < self.scale_down_util)
+            & (cur > 1)
+            & (tick - self._last_down >= self.down_cooldown_s)
+        )
+        up_target = np.maximum(
+            cur + 1,
+            _scale_target_vec(obs.throughput, obs.ewma_rate, 1.0 / self.util_target),
+        )
+        cur = np.where(up, up_target, np.where(down, cur - 1, cur))
+        self._last_up = np.where(up, tick, self._last_up)
+        self._last_down = np.where(down, tick, self._last_down)
+        self._targets = cur
+        return PoolAction(target=cur)
+
+
+@dataclass
+class VectorExascalePolicy:
+    """Vector form of :class:`ExascalePolicy`."""
+
+    vectorized = True
+    headroom: float = 1.15
+
+    def __call__(self, tick: int, obs: PoolObs) -> PoolAction:
+        return PoolAction(
+            target=_scale_target_vec(
+                obs.throughput,
+                np.maximum(obs.window_peak, obs.ewma_rate),
+                self.headroom,
+            )
+        )
+
+
+@dataclass
+class VectorMixedPolicy:
+    """Vector form of :class:`MixedPolicy`."""
+
+    vectorized = True
+
+    def __call__(self, tick: int, obs: PoolObs) -> PoolAction:
+        return PoolAction(
+            target=_scale_target_vec(obs.throughput, obs.ewma_rate),
+            offload=np.full(len(obs.keys), OFFLOAD_BLIND, dtype=np.int64),
+        )
+
+
+@dataclass
+class VectorSpotParagonPolicy(VectorParagonPolicy):
+    """Vector form of :class:`SpotParagonPolicy` (same knobs, same
+    decisions: on-demand floor for the strict share, spot for the rest)."""
+
+    strict_share: float = 0.25
+    spot_buffer: float = 1.25
+
+    def __call__(self, tick: int, obs: PoolObs) -> PoolAction:
+        demand = obs.ewma_rate + obs.queue_len / self.drain_horizon_s
+        floor = _scale_target_vec(obs.throughput, demand, self.strict_share)
+        residual = np.maximum(0.0, demand - floor * obs.throughput)
+        spot = np.ceil(residual * self.spot_buffer / obs.throughput).astype(
+            np.int64
+        )
+        return PoolAction(
+            target=floor,
+            spot_target=spot,
+            offload=np.full(len(obs.keys), OFFLOAD_SLACK_AWARE, dtype=np.int64),
+        )
+
+
 VECTOR_SCHEDULERS = {
     "reactive": VectorReactivePolicy,
+    "util_aware": VectorUtilAwarePolicy,
+    "exascale": VectorExascalePolicy,
+    "mixed": VectorMixedPolicy,
     "paragon": VectorParagonPolicy,
+    "spot_paragon": VectorSpotParagonPolicy,
 }

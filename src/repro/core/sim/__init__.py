@@ -41,5 +41,6 @@ from repro.core.sim.types import (  # noqa: F401
     PoolObs,
     VectorPolicy,
     replicate_pool,
+    shares,
     uniform_pool_workload,
 )

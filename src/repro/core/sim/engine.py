@@ -18,6 +18,16 @@ seconds.  Policies can speak either interface:
 * the vectorized form — ``observe_pool() -> PoolObs``,
   ``apply_pool(PoolAction)`` — arrays end-to-end, used by the
   ``Vector*`` schedulers on large pools.
+
+Arrivals come in two shapes (``trace`` argument):
+
+* a 1-D ``[T]`` pool trace — every arch sees ``share x trace`` (the
+  seed behavior); the load monitor exploits the shared shape and scales
+  precomputed pool statistics by share;
+* a 2-D ``[A, T]`` arrival matrix (:mod:`repro.core.workloads`) — each
+  arch has its own stream, and a vectorized streaming per-arch monitor
+  (:class:`~repro.core.load_monitor.PoolLoadMonitor`) computes
+  ``PoolObs.ewma_rate / window_peak / peak_to_median`` per arch.
 """
 from __future__ import annotations
 
@@ -27,7 +37,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.hardware import PRICING, FleetPricing
-from repro.core.load_monitor import LoadMonitor
+from repro.core.load_monitor import LoadMonitor, PoolLoadMonitor
 from repro.core.profiles import ModelProfile, get_profile
 from repro.core.sim.accounting import Ledger, SimResult
 from repro.core.sim.fleet import BurstTier, ResourceTier, SpotTier
@@ -42,6 +52,7 @@ from repro.core.sim.types import (
     Policy,
     PoolAction,
     PoolObs,
+    shares,
 )
 
 _OFFLOAD_CODE = {m: i for i, m in enumerate(OFFLOAD_MODES)}
@@ -95,7 +106,9 @@ class _QueueView:
 
 
 class _MonitorView:
-    """Per-arch load-monitor statistics (arch rate = share x pool rate)."""
+    """Per-arch window into the engine's materialized monitor vectors
+    (shared-trace runs: share x pool statistics; matrix runs: the
+    streaming per-arch monitor's own statistics)."""
 
     __slots__ = ("_sim", "_i")
 
@@ -104,15 +117,15 @@ class _MonitorView:
 
     @property
     def rate(self) -> float:
-        return float(self._sim._ewma * self._sim.share[self._i])
+        return float(self._sim._ewma_vec[self._i])
 
     @property
     def peak(self) -> float:
-        return float(self._sim._window_peak * self._sim.share[self._i])
+        return float(self._sim._peak_vec[self._i])
 
     @property
     def peak_to_median(self) -> float:
-        return float(self._sim._p2m)
+        return float(self._sim._p2m_vec[self._i])
 
 
 class ArchView:
@@ -163,7 +176,7 @@ class ServingSim:
 
     def __init__(
         self,
-        trace: np.ndarray,
+        trace: np.ndarray,                 # [T] pool trace or [A, T] matrix
         workload: List[ArchLoad],
         *,
         pricing: FleetPricing = PRICING,
@@ -171,7 +184,7 @@ class ServingSim:
         warm_start: bool = True,
         seed: int = 0,
     ):
-        self.trace = np.asarray(trace, dtype=np.float64)
+        arr = np.asarray(trace, dtype=np.float64)
         self.pricing = pricing
         self.rng = np.random.default_rng(seed)   # spot preemption draws
         self.tick = 0
@@ -181,8 +194,18 @@ class ServingSim:
         self.keys = keys
         n = len(workload)
 
+        if arr.ndim == 2:
+            assert arr.shape[0] == n, (
+                f"arrival matrix has {arr.shape[0]} rows for {n} archs"
+            )
+            self.arrivals: Optional[np.ndarray] = arr   # [A, T]
+            self.trace = arr.sum(axis=0)                # pooled view
+        else:
+            self.arrivals = None
+            self.trace = arr
+
         profs = [get_profile(w.arch, req=STRICT) for w in workload]
-        self.share = np.array([w.share for w in workload])
+        self.share = shares(workload)
         self.strict_frac = np.array([w.strict_frac for w in workload])
         self.throughput = np.array([p.throughput(STRICT) for p in profs])
         for w, thr in zip(workload, self.throughput):
@@ -214,23 +237,46 @@ class ServingSim:
         self.ledger = Ledger()
         self.last_util = np.zeros(n)
         self._ewma: Optional[float] = None
-        self._wpeak, self._wmed = _trace_window_stats(
-            self.trace, MONITOR_WINDOW_S
-        )
-        self._window_peak = 0.0
-        self._p2m = 1.0
+        if self.arrivals is None:
+            # shared trace: every arch is share x pool, so the window
+            # statistics are one precomputed pool pass scaled by share
+            self._wpeak, self._wmed = _trace_window_stats(
+                self.trace, MONITOR_WINDOW_S
+            )
+            self.pool_monitor: Optional[PoolLoadMonitor] = None
+        else:
+            # heterogeneous streams: per-arch streaming monitor
+            self._wpeak = self._wmed = None
+            self.pool_monitor = PoolLoadMonitor(n)
+        # materialized per-arch monitor vectors (what policies see)
+        self._ewma_vec = np.zeros(n)
+        self._peak_vec = np.zeros(n)
+        self._p2m_vec = np.ones(n)
         self._rates = np.zeros(n)
         self._pool_obs: Optional[PoolObs] = None
         self._spot_live = False
+
+        # per-arch flow accounting (arrived == served_vm + served_burst +
+        # dropped + queued, every tick; `per_arch_counts` exposes copies)
+        self.arrived_arch = np.zeros(n)
+        self.served_vm_arch = np.zeros(n)
+        self.served_burst_arch = np.zeros(n)
+        self.dropped_arch = np.zeros(n)
+        self.expired_end_arch = np.zeros(n)
+        self.violations_arch = np.zeros(n)
 
         self.states: Dict[str, ArchView] = {
             k: ArchView(self, i, w, p)
             for i, (k, w, p) in enumerate(zip(keys, workload, profs))
         }
 
+        t0_rates = (
+            self.trace[0] * self.share if self.arrivals is None
+            else self.arrivals[:, 0]
+        )
         if warm_start:
             self.reserved.active = np.maximum(
-                1, np.ceil(self.trace[0] * self.share / self.throughput)
+                1, np.ceil(t0_rates / self.throughput)
             ).astype(np.int64)
 
     # ------------------------------------------------------------------
@@ -248,32 +294,46 @@ class ServingSim:
     def observe_pool(self) -> PoolObs:
         """Admit this tick's arrivals and return the pool observation."""
         tick = self.tick
-        rate = float(self.trace[tick])
 
-        # load monitor, vectorized: every arch's stream is share x the
-        # pool stream, so EWMA/peak/median scale by share and the
-        # peak-to-median ratio is share-invariant
-        self._ewma = (
-            rate if self._ewma is None
-            else MONITOR_EWMA_ALPHA * rate + (1 - MONITOR_EWMA_ALPHA) * self._ewma
-        )
-        self._window_peak = float(self._wpeak[tick])
-        med = float(self._wmed[tick])
-        self._p2m = self._window_peak / med if med > 0 else 1.0
+        if self.arrivals is None:
+            rate = float(self.trace[tick])
+            # load monitor, vectorized: every arch's stream is share x the
+            # pool stream, so EWMA/peak/median scale by share and the
+            # peak-to-median ratio is share-invariant
+            self._ewma = (
+                rate if self._ewma is None
+                else MONITOR_EWMA_ALPHA * rate + (1 - MONITOR_EWMA_ALPHA) * self._ewma
+            )
+            window_peak = float(self._wpeak[tick])
+            med = float(self._wmed[tick])
+            p2m = window_peak / med if med > 0 else 1.0
 
-        rates = rate * self.share
+            rates = rate * self.share
+            self._ewma_vec = self._ewma * self.share
+            self._peak_vec = window_peak * self.share
+            self._p2m_vec = np.where(self.share > 0, p2m, 1.0)
+        else:
+            # heterogeneous streams: one streaming monitor update, every
+            # statistic per arch (share scaling cannot express these)
+            rates = self.arrivals[:, tick].copy()
+            self.pool_monitor.observe(rates)
+            self._ewma_vec, self._peak_vec, _, self._p2m_vec = (
+                self.pool_monitor.stats()
+            )
+
         n_strict = rates * self.strict_frac
         self.q_strict.push(tick, n_strict)
         self.q_relaxed.push(tick, rates - n_strict)
         self.ledger.add_arrivals(float(rates.sum()))
         self._rates = rates
+        self.arrived_arch += rates
 
         self._pool_obs = PoolObs(
             keys=self.keys,
             rate=rates,
-            ewma_rate=self._ewma * self.share,
-            window_peak=self._window_peak * self.share,
-            peak_to_median=np.where(self.share > 0, self._p2m, 1.0),
+            ewma_rate=self._ewma_vec,
+            window_peak=self._peak_vec,
+            peak_to_median=self._p2m_vec,
             queue_len=self.q_strict.totals() + self.q_relaxed.totals(),
             n_active=self.reserved.active.copy(),
             n_pending=self.reserved.pending_total.copy(),
@@ -363,6 +423,8 @@ class ServingSim:
         served = served_s + served_r
         led.add_served_vm(float(served.sum()))
         led.add_violations(float(late_s.sum() + late_r.sum()), float(late_s.sum()))
+        self.served_vm_arch += served
+        self.violations_arch += late_s + late_r
         self.last_util = np.where(
             capacity > 0, served / np.where(capacity > 0, capacity, 1.0), 1.0
         )
@@ -385,16 +447,23 @@ class ServingSim:
                 # 1e-12 threshold) and must not warm the burst pool
                 counts[counts <= 1e-9] = 0.0
                 if counts.any():
-                    self.burst.offload(tick, counts, q.slo_s, strict, led)
+                    burst_viol = self.burst.offload(
+                        tick, counts, q.slo_s, strict, led
+                    )
+                    self.served_burst_arch += counts
+                    self.violations_arch += burst_viol
 
         # abandon hopeless VM-only waiters (count violation once):
         # anything older than 3x its SLO is recorded and dropped so
         # queues cannot grow without bound under sustained shortfall.
         for q, strict in ((self.q_strict, True), (self.q_relaxed, False)):
-            dropped = float(q.drop_expired(tick).sum())
+            dropped_a = q.drop_expired(tick)
+            dropped = float(dropped_a.sum())
             if dropped > 0:
                 led.add_violations(dropped, dropped if strict else 0.0)
                 led.add_served_vm(dropped)   # still answered, just very late
+                self.dropped_arch += dropped_a
+                self.violations_arch += dropped_a
 
         # accounting
         chip_s = self.reserved.account(led, self.chips)
@@ -414,8 +483,29 @@ class ServingSim:
         # end-of-trace: whatever is still queued past its slack violates
         end = len(self.trace)
         for q, strict in ((self.q_strict, True), (self.q_relaxed, False)):
-            late = float(q.pop_older_than_slack(end).sum())
+            late_a = q.pop_older_than_slack(end)
+            late = float(late_a.sum())
             self.ledger.add_violations(late, late if strict else 0.0)
+            self.violations_arch += late_a
+            self.expired_end_arch += late_a
+
+    def per_arch_counts(self) -> Dict[str, np.ndarray]:
+        """Per-arch flow totals so far, each an ``[A]`` copy.
+
+        ``arrived == served_vm + served_burst + dropped + expired_end +
+        queued`` holds per arch after every tick (``dropped`` is the
+        abandoned mass the ledger books as served-but-violated;
+        ``expired_end`` is the still-queued late mass the end-of-trace
+        sweep removes without serving)."""
+        return {
+            "arrived": self.arrived_arch.copy(),
+            "served_vm": self.served_vm_arch.copy(),
+            "served_burst": self.served_burst_arch.copy(),
+            "dropped": self.dropped_arch.copy(),
+            "expired_end": self.expired_end_arch.copy(),
+            "violations": self.violations_arch.copy(),
+            "queued": self.q_strict.totals() + self.q_relaxed.totals(),
+        }
 
     # ------------------------------------------------------------------
     def snapshot(self) -> dict:
@@ -431,7 +521,7 @@ class ServingSim:
 
 
 def simulate(
-    trace: np.ndarray,                       # per-second arrival rate (req/s)
+    trace: np.ndarray,                       # [T] pool req/s or [A, T] matrix
     workload: List[ArchLoad],
     policy,                                  # Policy or VectorPolicy
     *,
@@ -442,8 +532,11 @@ def simulate(
 ) -> SimResult:
     """Closed-loop run: the policy drives :class:`ServingSim` over the trace.
 
-    Policies with a truthy ``vectorized`` attribute get the SoA interface
-    (``PoolObs -> PoolAction``); everything else gets the dict interface.
+    ``trace`` may be a 1-D pool trace (fanned out by ``share``) or a 2-D
+    per-arch arrival matrix from :mod:`repro.core.workloads` (e.g.
+    ``Scenario.build(len(workload))``).  Policies with a truthy
+    ``vectorized`` attribute get the SoA interface (``PoolObs ->
+    PoolAction``); everything else gets the dict interface.
     """
     sim = ServingSim(
         trace, workload, pricing=pricing, prewarm=prewarm, warm_start=warm_start

@@ -174,13 +174,17 @@ class BurstTier:
     def offload(
         self, tick: int, counts: np.ndarray, slo_s: float, strict: bool,
         ledger: Ledger,
-    ) -> None:
-        """Send ``counts[a]`` requests to the burst pool right now."""
+    ) -> np.ndarray:
+        """Send ``counts[a]`` requests to the burst pool right now;
+        returns the per-arch violation counts (requests whose burst
+        latency exceeded the class SLO)."""
         lat = self.latency(tick)
+        viol = counts * (lat > slo_s)
         ledger.add_burst(
             cost=float((self.cost_per_request * counts).sum()),
             served=float(counts.sum()),
-            violations=float((counts * (lat > slo_s)).sum()),
+            violations=float(viol.sum()),
             strict=strict,
         )
         self.last_used = np.where(counts > 0, float(tick), self.last_used)
+        return viol

@@ -31,6 +31,11 @@ OFFLOAD_NONE, OFFLOAD_BLIND, OFFLOAD_SLACK_AWARE = range(3)
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class ArchLoad:
+    """One pool member.  ``share`` only splits a 1-D pool trace; when the
+    engine is driven by a per-arch ``[A, T]`` arrival matrix
+    (:mod:`repro.core.workloads`) each row IS the arch's stream and
+    ``share`` is ignored for admission (``strict_frac`` still applies)."""
+
     arch: str
     share: float                   # fraction of total arrivals
     strict_frac: float = 0.5       # strict vs relaxed query mix (workload-1)
@@ -40,6 +45,13 @@ class ArchLoad:
     @property
     def key(self) -> str:
         return self.name or self.arch
+
+
+def shares(workload: List["ArchLoad"]) -> np.ndarray:
+    """The workload's share vector ``[A]`` — what fans a 1-D pool trace
+    out per arch, and what :func:`repro.core.workloads.from_pool_trace`
+    needs to rebuild those arrivals as a matrix."""
+    return np.array([w.share for w in workload], dtype=np.float64)
 
 
 def uniform_pool_workload(archs: List[str], strict_frac: float = 0.5) -> List[ArchLoad]:

@@ -96,9 +96,18 @@ def get_trace(name: str, duration_s: int = DEFAULT_DURATION_S,
     return TRACES[name](duration_s, mean_rps, seed)
 
 
-def peak_to_median(rate: np.ndarray, peak_q: float = 0.99) -> float:
-    """Fig-7 statistic (p99 peak guards against one-sample outliers)."""
-    return float(np.quantile(rate, peak_q) / max(np.median(rate), 1e-9))
+def peak_to_median(rate: np.ndarray, peak_q: float = 0.99, axis=None):
+    """Fig-7 statistic (p99 peak guards against one-sample outliers).
+
+    1-D input returns a float; an ``[A, T]`` arrival matrix with
+    ``axis=1`` returns the per-arch statistic ``[A]`` — the spread of
+    these over a heterogeneous scenario is exactly what share-scaling a
+    single pool trace flattens away.
+    """
+    peak = np.quantile(rate, peak_q, axis=axis)
+    med = np.maximum(np.median(rate, axis=axis), 1e-9)
+    out = peak / med
+    return float(out) if out.ndim == 0 else out
 
 
 def trace_stats(duration_s: int = DEFAULT_DURATION_S, seed: int = 0) -> Dict[str, dict]:

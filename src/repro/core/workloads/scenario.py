@@ -1,0 +1,128 @@
+"""Declarative, seeded, serializable workload scenarios.
+
+A :class:`Scenario` names a generator (:data:`~repro.core.workloads.generators.GENERATORS`),
+its parameters, a duration, a pool-mean rate, and a seed — everything a
+benchmark, test, or RL env needs to rebuild the exact same ``[A, T]``
+arrival matrix, as a plain dict/JSON round-trippable record:
+
+    sc = Scenario("flash", kind="flash_crowd", params={"mode": "anti"})
+    arrivals = sc.build(n_archs=8)          # [8, 3600], deterministic
+    sc2 = Scenario.from_json(sc.to_json())  # == sc
+
+The :data:`SCENARIO_ZOO` holds the named presets the scenario-grid
+benchmark and the examples run: one shared-trace baseline plus the
+heterogeneous shapes (phase-shifted diurnals, correlated / anti-correlated
+flash crowds, MMPP bursts, trending-model hotswap) that share scaling
+cannot express.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional
+
+import numpy as np
+
+from repro.core.workloads.generators import GENERATORS
+
+DEFAULT_DURATION_S = 3600
+DEFAULT_MEAN_RPS = 100.0
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named, seeded recipe for a per-arch arrival matrix."""
+
+    name: str
+    kind: str                                  # key into GENERATORS
+    duration_s: int = DEFAULT_DURATION_S
+    mean_rps: float = DEFAULT_MEAN_RPS         # pool mean (req/s)
+    seed: int = 0
+    params: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        assert self.kind in GENERATORS, (
+            f"unknown scenario kind {self.kind!r}; have {sorted(GENERATORS)}"
+        )
+
+    # -- building -----------------------------------------------------------
+    def build(self, n_archs: int, *, seed: Optional[int] = None,
+              duration_s: Optional[int] = None,
+              mean_rps: Optional[float] = None) -> np.ndarray:
+        """Materialize the ``[n_archs, duration_s]`` arrival matrix.
+
+        ``seed`` (and the other overrides) re-roll one realization
+        without mutating the spec — the RL env uses this to sample a
+        fresh episode from the same scenario family.
+        """
+        gen = GENERATORS[self.kind]
+        mat = gen(
+            n_archs,
+            int(self.duration_s if duration_s is None else duration_s),
+            float(self.mean_rps if mean_rps is None else mean_rps),
+            int(self.seed if seed is None else seed),
+            **dict(self.params),
+        )
+        assert mat.shape[0] == n_archs
+        return mat
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "duration_s": self.duration_s,
+            "mean_rps": self.mean_rps,
+            "seed": self.seed,
+            "params": dict(self.params),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Scenario":
+        return cls(
+            name=d["name"],
+            kind=d["kind"],
+            duration_s=int(d.get("duration_s", DEFAULT_DURATION_S)),
+            mean_rps=float(d.get("mean_rps", DEFAULT_MEAN_RPS)),
+            seed=int(d.get("seed", 0)),
+            params=dict(d.get("params", {})),
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Scenario":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Named presets.
+# ---------------------------------------------------------------------------
+SCENARIO_ZOO: Dict[str, Scenario] = {
+    sc.name: sc
+    for sc in (
+        # today's behavior: one pool trace, static share
+        Scenario("shared_berkeley", kind="pool_trace",
+                 params={"trace": "berkeley"}),
+        # regions in different time zones: arch peaks spread over the cycle
+        Scenario("diurnal_phases", kind="diurnal",
+                 params={"phase_jitter": 1.0, "amp_jitter": 0.5}),
+        # a launch event hits half the pool at once
+        Scenario("flash_correlated", kind="flash_crowd",
+                 params={"mode": "correlated", "n_events": 3}),
+        # attention shifts: one model trends while the others drain
+        Scenario("flash_anti", kind="flash_crowd",
+                 params={"mode": "anti", "n_events": 3, "dip": 0.6}),
+        # decorrelated heavy-tailed bursts per arch
+        Scenario("mmpp_bursts", kind="mmpp",
+                 params={"burst_mult": 4.0}),
+        # trending-model popularity migration over a smooth pool trace
+        Scenario("trending_hotswap", kind="hotswap",
+                 params={"n_shifts": 3, "boost": 5.0}),
+    )
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    return SCENARIO_ZOO[name]

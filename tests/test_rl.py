@@ -14,12 +14,45 @@ from repro.core.rl.ppo import (
     train_ppo,
 )
 from repro.core.traces import get_trace
+from repro.core.workloads import get_scenario
 
 
 @pytest.fixture(scope="module")
 def env():
     trace = get_trace("twitter", 300, mean_rps=40)
     return ServingEnv(EnvConfig(arch="qwen1.5-0.5b", mean_rps=40), trace)
+
+
+def test_env_scenario_sampling_deterministic_and_varied():
+    """A scenario-pool env samples a fresh seeded realization per episode:
+    two envs with the same scenario_seed walk identical episode sequences,
+    and consecutive episodes see different arrivals."""
+    cfg = EnvConfig(arch="qwen1.5-0.5b", mean_rps=40, duration_s=150)
+    scs = [get_scenario("mmpp_bursts"), get_scenario("flash_anti")]
+    e1 = ServingEnv(cfg, scenarios=scs, scenario_seed=3)
+    e2 = ServingEnv(cfg, scenarios=scs, scenario_seed=3)
+    o1, o2 = e1.reset(), e2.reset()
+    np.testing.assert_array_equal(o1, o2)
+    np.testing.assert_array_equal(e1.sim.trace, e2.sim.trace)
+    assert e1.last_scenario.name == e2.last_scenario.name
+    ep1 = e1.sim.trace.copy()
+    e1.reset()
+    assert not np.array_equal(e1.sim.trace, ep1)   # fresh realization
+    # the sampled arrivals land on the cfg's duration / pool mean
+    assert e1.sim.trace.shape == (150,)
+    assert e1.sim.trace.mean() == pytest.approx(40.0, rel=0.1)
+
+
+def test_env_scenario_episode_runs_to_done():
+    cfg = EnvConfig(arch="qwen1.5-0.5b", mean_rps=30, duration_s=120)
+    env = ServingEnv(cfg, scenarios=[get_scenario("diurnal_phases")])
+    env.reset()
+    done, steps = False, 0
+    while not done:
+        _, r, done, _ = env.step(steps % N_ACTIONS)
+        assert np.isfinite(r)
+        steps += 1
+    assert steps == 120
 
 
 def test_env_contract(env):

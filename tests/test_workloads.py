@@ -1,0 +1,195 @@
+"""The workload scenario subsystem: generator determinism, Scenario
+round-trips, the per-arch engine path (streaming monitor, per-arch
+conservation), and backward equivalence — ``from_pool_trace`` arrivals
+must reproduce the shared-trace engine."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.load_monitor import LoadMonitor, PoolLoadMonitor
+from repro.core.schedulers import SCHEDULERS, VECTOR_SCHEDULERS
+from repro.core.sim import ServingSim, shares, simulate, uniform_pool_workload
+from repro.core.traces import get_trace
+from repro.core.workloads import (
+    GENERATORS,
+    SCENARIO_ZOO,
+    Scenario,
+    from_pool_trace,
+    get_scenario,
+)
+
+SEED_ARCHS = ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b"]
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return uniform_pool_workload(SEED_ARCHS, strict_frac=0.25)
+
+
+# ---------------------------------------------------------------------------
+# Generators.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", sorted(GENERATORS))
+def test_generator_deterministic_and_normalized(kind):
+    """Same seed -> bit-identical matrix; different seed -> different
+    realization; pool mean lands on mean_rps; everything non-negative."""
+    gen = GENERATORS[kind]
+    m1 = gen(6, 500, 80.0, 3)
+    m2 = gen(6, 500, 80.0, 3)
+    m3 = gen(6, 500, 80.0, 4)
+    assert m1.shape == (6, 500)
+    np.testing.assert_array_equal(m1, m2)
+    assert not np.array_equal(m1, m3)
+    assert (m1 >= 0).all()
+    assert m1.sum(axis=0).mean() == pytest.approx(80.0, rel=0.05)
+
+
+def test_from_pool_trace_is_exact_share_scaling():
+    trace = get_trace("twitter", 300, mean_rps=50)
+    share = np.array([0.5, 0.3, 0.2])
+    mat = from_pool_trace(trace, share)
+    # bit-identical to the engine's internal fan-out (trace[t] * share[a])
+    for t in (0, 17, 299):
+        np.testing.assert_array_equal(mat[:, t], trace[t] * share)
+
+
+def test_flash_crowd_modes_differ():
+    kw = dict(n_events=2, amplitude=4.0)
+    corr = GENERATORS["flash_crowd"](4, 600, 100.0, 1, mode="correlated", **kw)
+    anti = GENERATORS["flash_crowd"](4, 600, 100.0, 1, mode="anti", **kw)
+    solo = GENERATORS["flash_crowd"](4, 600, 100.0, 1, mode="solo", **kw)
+    assert not np.array_equal(corr, anti) and not np.array_equal(anti, solo)
+
+
+def test_hotswap_shifts_popularity():
+    """After a hotswap shift the per-arch share of pool demand moves:
+    some arch's late-window share grows well beyond its early share."""
+    mat = GENERATORS["hotswap"](4, 1200, 100.0, 5, n_shifts=2, boost=6.0)
+    w_early = mat[:, :200].sum(axis=1) / mat[:, :200].sum()
+    w_late = mat[:, -200:].sum(axis=1) / mat[:, -200:].sum()
+    assert np.abs(w_late - w_early).max() > 0.1
+
+
+# ---------------------------------------------------------------------------
+# Scenario spec.
+# ---------------------------------------------------------------------------
+def test_scenario_json_roundtrip_rebuilds_identically():
+    sc = get_scenario("mmpp_bursts")
+    sc2 = Scenario.from_json(sc.to_json())
+    assert sc2 == sc
+    np.testing.assert_array_equal(sc.build(5), sc2.build(5))
+    # the dict form is plain JSON (benchmark artifacts embed it)
+    json.dumps(sc.to_dict())
+
+
+def test_scenario_overrides_do_not_mutate_spec():
+    sc = get_scenario("diurnal_phases")
+    a = sc.build(3, seed=99, duration_s=200, mean_rps=10.0)
+    assert a.shape == (3, 200)
+    assert a.sum(axis=0).mean() == pytest.approx(10.0, rel=0.05)
+    b = sc.build(3)
+    assert b.shape == (3, sc.duration_s)   # spec unchanged
+
+
+def test_unknown_scenario_kind_rejected():
+    with pytest.raises(AssertionError):
+        Scenario("bad", kind="nope")
+
+
+# ---------------------------------------------------------------------------
+# The streaming per-arch monitor.
+# ---------------------------------------------------------------------------
+def test_pool_monitor_matches_scalar_monitor_per_row():
+    """PoolLoadMonitor == one LoadMonitor per arch, on arbitrary streams."""
+    rng = np.random.default_rng(0)
+    rates = rng.uniform(0, 50, size=(3, 700))   # longer than the window
+    pool = PoolLoadMonitor(3)
+    scalars = [LoadMonitor() for _ in range(3)]
+    for t in range(rates.shape[1]):
+        pool.observe(rates[:, t])
+        for a, m in enumerate(scalars):
+            m.observe(float(rates[a, t]))
+        np.testing.assert_allclose(pool.rate, [m.rate for m in scalars], rtol=1e-12)
+        np.testing.assert_allclose(pool.peak, [m.peak for m in scalars], rtol=1e-12)
+        if t in (0, 5, 298, 299, 300, 699):     # window edges + steady state
+            np.testing.assert_allclose(
+                pool.median, [m.median for m in scalars], rtol=1e-12
+            )
+            np.testing.assert_allclose(
+                pool.peak_to_median,
+                [m.peak_to_median for m in scalars], rtol=1e-12,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Backward equivalence: the per-arch path reproduces the shared path.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["reactive", "exascale", "mixed", "paragon"])
+def test_from_pool_trace_matches_shared_engine(workload, policy):
+    """Driving the engine with the from_pool_trace matrix must reproduce
+    the shared-trace run exactly at summary level — the adapter IS
+    today's behavior, through the new per-arch monitor path."""
+    trace = get_trace("berkeley", 400, mean_rps=120)
+    mat = from_pool_trace(trace, shares(workload))
+    a = simulate(trace, workload, SCHEDULERS[policy]()).summary()
+    b = simulate(mat, workload, SCHEDULERS[policy]()).summary()
+    assert a == b
+
+
+def test_from_pool_trace_matches_shared_engine_vectorized(workload):
+    trace = get_trace("wits", 500, mean_rps=90)
+    mat = from_pool_trace(trace, shares(workload))
+    a = simulate(trace, workload, VECTOR_SCHEDULERS["paragon"]()).summary()
+    b = simulate(mat, workload, VECTOR_SCHEDULERS["paragon"]()).summary()
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Per-arch conservation through the matrix path.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(SCENARIO_ZOO))
+def test_per_arch_conservation_every_tick(workload, name):
+    """admitted == served_vm + served_burst + dropped + queued, per arch,
+    after every tick, for every zoo scenario."""
+    sc = get_scenario(name)
+    arrivals = sc.build(len(workload), duration_s=300, mean_rps=60.0)
+    sim = ServingSim(arrivals, workload)
+    pol = VECTOR_SCHEDULERS["paragon"]()
+    while not sim.done:
+        sim.apply_pool(pol(sim.tick, sim.observe_pool()))
+        c = sim.per_arch_counts()
+        accounted = (
+            c["served_vm"] + c["served_burst"] + c["dropped"]
+            + c["expired_end"] + c["queued"]
+        )
+        np.testing.assert_allclose(c["arrived"], accounted, atol=1e-6)
+    # and the per-arch totals agree with the pool ledger
+    c = sim.per_arch_counts()
+    assert sim.res.total_requests == pytest.approx(float(c["arrived"].sum()))
+    assert sim.res.served_burst == pytest.approx(float(c["served_burst"].sum()))
+
+
+def test_heterogeneous_monitor_sees_per_arch_bursts(workload):
+    """One arch bursts, the rest stay flat: only the bursting arch's
+    peak-to-median should blow up — exactly what share-scaling of a pool
+    monitor can never express."""
+    n, T = len(workload), 900
+    arrivals = np.full((n, T), 20.0)
+    arrivals[2, 450:480] = 200.0           # one flash crowd on arch 2
+    sim = ServingSim(arrivals, workload)
+    pol = VECTOR_SCHEDULERS["reactive"]()
+    p2m_at_burst = None
+    while not sim.done:
+        obs = sim.observe_pool()
+        if sim.tick == 500:
+            p2m_at_burst = obs.peak_to_median.copy()
+        sim.apply_pool(pol(sim.tick, obs))
+    flat = [a for a in range(n) if a != 2]
+    assert p2m_at_burst[2] > 5.0
+    assert np.all(p2m_at_burst[flat] < 1.5)
+
+
+def test_matrix_shape_mismatch_rejected(workload):
+    with pytest.raises(AssertionError):
+        ServingSim(np.ones((2, 100)), workload)   # 2 rows for 4 archs

@@ -70,7 +70,8 @@ def run() -> bool:
             "peak_to_median_arch": [round(float(v), 3) for v in p2m],
         }
         for pol_name in sorted(VECTOR_SCHEDULERS):
-            res, counts = _run_one(arrivals, wl, VECTOR_SCHEDULERS[pol_name]())
+            pol = VECTOR_SCHEDULERS[pol_name]()
+            res, counts = _run_one(arrivals, wl, pol)
             accounted = (
                 counts["served_vm"] + counts["served_burst"] + counts["dropped"]
                 + counts["expired_end"] + counts["queued"]
@@ -86,6 +87,10 @@ def run() -> bool:
                 "violation_rate_arch_max": float(viol_arch.max()),
                 "violation_rate_arch_spread": float(viol_arch.max() - viol_arch.min()),
             }
+            if hasattr(pol, "trained"):
+                # a learned policy running from fallback (untrained) weights
+                # must be visible in the artifact, not just functional
+                cell[pol_name]["trained"] = bool(pol.trained)
         paragon_cheaper &= (
             cell["paragon"]["cost_total"] <= cell["exascale"]["cost_total"]
         )

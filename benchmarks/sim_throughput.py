@@ -6,13 +6,21 @@ vectorized engine, against the seed per-arch Python loop (kept as
 trace and reported as ticks/sec.  Tracks the perf trajectory of the
 engine from PR 1 onward; artifact: ``BENCH_sim_throughput.json``.
 
-Claim: a 64-arch pool over a 24 h trace runs >= 10x faster than the seed
-per-arch loop.
+Also microbenchmarks the streaming per-arch load monitor at A=256: the
+banded incremental order-statistic structure
+(:class:`repro.core.load_monitor.PoolLoadMonitor`) vs the naive per-tick
+window median/max recompute it replaced.
+
+Claims: a 64-arch pool over a 24 h trace runs >= 10x faster than the
+seed per-arch loop; the incremental monitor is >= 1.5x the naive
+recompute at a 256-arch pool.
 """
 from __future__ import annotations
 
 import time
 from typing import List
+
+import numpy as np
 
 from benchmarks.common import (
     BENCH_SMALL,
@@ -21,6 +29,7 @@ from benchmarks.common import (
     print_rows,
     write_artifact,
 )
+from repro.core.load_monitor import PoolLoadMonitor
 from repro.core.schedulers import SCHEDULERS, VECTOR_SCHEDULERS
 from repro.core.sim import replicate_pool, simulate, simulate_reference
 from repro.core.traces import get_trace
@@ -30,6 +39,29 @@ DAY_TICKS = 7_200 if BENCH_SMALL else 86_400
 BASELINE_TICKS = 300 if BENCH_SMALL else 1_000
 MEAN_RPS = 400.0
 STRICT_FRAC = 0.25
+MONITOR_ARCHS = 256
+MONITOR_TICKS = 1_000 if BENCH_SMALL else 3_000
+
+
+def _monitor_bench() -> dict:
+    """Steady-state monitor ticks/s at A=256: incremental vs naive."""
+    rng = np.random.default_rng(0)
+    out = {"archs": MONITOR_ARCHS, "ticks": MONITOR_TICKS}
+    for name, flag in (("incremental", True), ("naive", False)):
+        mon = PoolLoadMonitor(MONITOR_ARCHS, incremental=flag)
+        stream = rng.gamma(2.0, 50.0, (MONITOR_TICKS + mon.window_s, MONITOR_ARCHS))
+        for t in range(mon.window_s):                 # fill outside the clock
+            mon.observe(stream[t])
+        t0 = time.perf_counter()
+        for t in range(mon.window_s, mon.window_s + MONITOR_TICKS):
+            mon.observe(stream[t])
+            mon.stats()
+        wall = time.perf_counter() - t0
+        out[name] = {"wall_s": wall, "ticks_per_s": MONITOR_TICKS / wall}
+    out["speedup"] = (
+        out["incremental"]["ticks_per_s"] / out["naive"]["ticks_per_s"]
+    )
+    return out
 
 
 def run() -> bool:
@@ -67,6 +99,7 @@ def run() -> bool:
     engine_tps = payload["pool_sizes"][str(n)]["ticks_per_s"]
     speedup = engine_tps / baseline_tps
     payload["speedup_64arch"] = speedup
+    payload["monitor_a256"] = mon = _monitor_bench()
 
     rows: List[Row] = [
         (
@@ -82,6 +115,11 @@ def run() -> bool:
         "speedup_64arch_day", speedup,
         f"64-arch {DAY_TICKS}-tick pool >= 10x faster than the seed loop",
         speedup >= 10.0,
+    ))
+    rows.append((
+        "monitor_speedup_a256", mon["speedup"],
+        "incremental banded monitor >= 1.5x naive window recompute at A=256",
+        mon["speedup"] >= 1.5,
     ))
 
     write_artifact("BENCH_sim_throughput", payload)

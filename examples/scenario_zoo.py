@@ -20,7 +20,8 @@ from repro.core.schedulers import VECTOR_SCHEDULERS
 from repro.core.sim import ServingSim, uniform_pool_workload
 
 ARCHS = ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b"]
-SHOWN = ["diurnal_phases", "flash_anti", "mmpp_bursts", "trending_hotswap"]
+SHOWN = ["diurnal_phases", "flash_anti", "mmpp_bursts", "trending_hotswap",
+         "diurnal_flash_splice"]
 SPARKS = " .:-=+*#%@"
 
 

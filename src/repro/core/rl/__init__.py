@@ -1,2 +1,58 @@
-from repro.core.rl.env import ServingEnv, EnvConfig  # noqa: F401
-from repro.core.rl.ppo import PPOConfig, PPOState, train_ppo, policy_action  # noqa: F401
+"""The control subsystem: the serving simulator as an RL problem.
+
+  obs     — [A, OBS_DIM] feature construction + the factored per-arch
+            action space (NumPy-only, shared by env and deployed policy)
+  env     — PoolServingEnv (pool-wide, SoA, per-arch reward
+            decomposition) and the single-arch ServingEnv wrapper
+  ppo     — batched pool PPO in JAX ([T, A] rollouts, GAE over [T, A],
+            jitted minibatch updates over the flattened batch)
+  policy  — RLPoolPolicy: the trained controller as a ``vectorized``
+            scheduler (registered in ``VECTOR_SCHEDULERS["rl_pool"]``)
+
+The training half (``ppo``) is the only JAX dependency; its exports are
+loaded lazily so that importing the package — which the classical
+schedulers do to register ``rl_pool`` — stays NumPy-only.
+"""
+from repro.core.rl.env import (  # noqa: F401
+    EnvConfig,
+    PoolServingEnv,
+    ServingEnv,
+)
+from repro.core.rl.obs import (  # noqa: F401
+    HEADROOMS,
+    N_ACTIONS,
+    OBS_DIM,
+    OFFLOADS,
+    pool_features,
+    procurement_action,
+)
+from repro.core.rl.policy import (  # noqa: F401
+    DEFAULT_CHECKPOINT,
+    RLPoolPolicy,
+    load_policy_params,
+    save_policy_params,
+)
+
+#: lazily resolved from :mod:`repro.core.rl.ppo` (pulls in JAX)
+_PPO_EXPORTS = (
+    "PPOConfig",
+    "PPOState",
+    "evaluate_policy",
+    "evaluate_pool_policy",
+    "policy_action",
+    "pool_policy_action",
+    "train_ppo",
+    "train_ppo_pool",
+)
+
+
+def __getattr__(name: str):
+    if name in _PPO_EXPORTS:
+        from repro.core.rl import ppo
+
+        return getattr(ppo, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_PPO_EXPORTS))

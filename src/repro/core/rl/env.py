@@ -1,44 +1,60 @@
 """The serving simulator as an RL environment (paper §V, Figure 10).
 
 The agent observes the system state o_i, takes action a_i (a joint
-procurement decision: fleet delta x offload mode), reaches actual state
-f_{i+1}, and receives a transition reward blending the paper's reward
-policies: cost, response latency (violations), and utilization.
+procurement decision: fleet headroom x offload mode), reaches actual
+state f_{i+1}, and receives a transition reward blending the paper's
+reward policies: cost, response latency (violations), and utilization.
 
-Observation (per tick, single-arch fleet, normalized):
-  [rate, ewma, peak/median, queue_strict, queue_relaxed,
-   n_active, n_pending, utilization, trend]
+:class:`PoolServingEnv` is the pool-wide form the paper's end state
+needs — one controller managing the *whole* heterogeneous pool:
 
-Workloads: a fixed trace (seed behavior) or a pool of
-:class:`~repro.core.workloads.Scenario` specs sampled per episode, so
-the controller generalizes across heterogeneous load shapes instead of
-overfitting one arrival sequence.
+* observations are structure-of-arrays ``[A, OBS_DIM]`` built straight
+  from the engine's :class:`~repro.core.sim.PoolObs` (no per-arch dict
+  construction anywhere on the rollout path);
+* the action is factored per arch — every row picks one of
+  ``N_ACTIONS`` (headroom x offload) decisions, so a policy whose
+  parameters are applied row-wise controls any pool size;
+* the reward is *decomposed per arch* from the engine's per-arch cost
+  attribution and violation counts: ``step`` returns an ``[A]`` reward
+  vector whose sum is the scalar pool reward, giving PPO per-arch
+  credit assignment;
+* episodes are driven by ``[A, T]`` arrival matrices — a fixed matrix,
+  or a pool of :class:`~repro.core.workloads.Scenario` specs sampled
+  per episode (fresh seeded realization each reset) so the controller
+  trains across heterogeneous load shapes instead of memorizing one
+  trace.
 
-Action space (discrete, 4 headrooms x 3 offload modes = 12):
+:class:`ServingEnv` is kept as a thin single-arch compatibility wrapper
+(A=1, scalar reward, flat observation) — the seed-era interface the
+existing tests and examples drive.
+
+Action space per arch (discrete, 4 headrooms x 3 offload modes = 12):
   headroom in {0.85, 1.0, 1.15, 1.4} — reserved target is
       ceil(headroom x demand / per-instance-throughput), where demand
       includes the queued backlog.  Bounded action -> stable credit
-      assignment despite the 120 s provisioning lag (the paper's "adjusts
-      its policy as long as it is within the desired policy target range").
+      assignment despite the 120 s provisioning lag (the paper's
+      "adjusts its policy as long as it is within the desired policy
+      target range").
   offload in {none, blind, slack_aware}
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.hardware import PRICING, FleetPricing
-from repro.core.sim import Action, ArchLoad, ServingSim
+from repro.core.rl.obs import (  # noqa: F401  (re-exported seed surface)
+    HEADROOMS,
+    N_ACTIONS,
+    OBS_DIM,
+    OFFLOADS,
+    pool_features,
+    procurement_action,
+)
+from repro.core.sim import ArchLoad, ServingSim
 from repro.core.workloads import Scenario
-
-HEADROOMS = (0.85, 1.0, 1.15, 1.4)
-OFFLOADS = ("none", "blind", "slack_aware")
-N_ACTIONS = len(HEADROOMS) * len(OFFLOADS)
-OBS_DIM = 10
 
 
 @dataclass(frozen=True)
@@ -54,19 +70,106 @@ class EnvConfig:
     fleet_scale: float = 10.0
 
 
-class ServingEnv:
-    """Gym-like wrapper over :class:`ServingSim` for a single-arch fleet.
+class PoolServingEnv:
+    """Pool-wide gym-like wrapper over :class:`ServingSim`.
 
-    Two workload sources:
+    Three workload sources, in precedence order per ``reset``:
 
-    * a fixed ``trace`` — every episode replays the same arrivals (the
-      seed behavior, still what the deterministic eval harness wants);
+    * an explicit ``arrivals`` matrix passed to ``reset`` (eval runs);
     * ``scenarios`` — a pool of :class:`~repro.core.workloads.Scenario`
-      specs; each ``reset()`` samples one and builds a *fresh seeded
-      realization* of it, so the controller trains across heterogeneous
-      load shapes instead of memorizing one trace.  Sampling is driven
-      by ``scenario_seed`` and an episode counter: deterministic overall,
-      different every episode.
+      specs; each ``reset()`` samples one and builds a fresh seeded
+      ``[A, T]`` realization (sampling driven by ``scenario_seed`` and
+      an episode counter: deterministic overall, different every
+      episode);
+    * the fixed ``arrivals`` the env was constructed with.
+
+    ``step`` takes an ``[A]`` integer action vector and returns
+    ``(obs [A, OBS_DIM], reward_arch [A], done, metrics)``; the scalar
+    pool reward is ``reward_arch.sum()``.
+    """
+
+    def __init__(self, workload: Sequence[ArchLoad], cfg: EnvConfig = EnvConfig(),
+                 arrivals: Optional[np.ndarray] = None, *,
+                 scenarios: Optional[Sequence[Scenario]] = None,
+                 scenario_seed: int = 0):
+        assert arrivals is not None or scenarios, (
+            "PoolServingEnv needs a fixed arrival matrix or a scenario pool"
+        )
+        self.workload: List[ArchLoad] = list(workload)
+        self.n_archs = len(self.workload)
+        self.cfg = cfg
+        self.base_arrivals = arrivals
+        self.scenarios = tuple(scenarios) if scenarios else ()
+        self._scenario_rng = np.random.default_rng(scenario_seed)
+        self._episode = 0
+        self.last_scenario: Optional[Scenario] = None
+        self.sim: Optional[ServingSim] = None
+        self._prev_rate = np.zeros(self.n_archs)
+        self._pobs = None
+
+    # ------------------------------------------------------------------
+    def _sample_arrivals(self) -> np.ndarray:
+        """One episode's arrivals: ``[A, T]`` from a sampled scenario."""
+        sc = self.scenarios[self._scenario_rng.integers(len(self.scenarios))]
+        self.last_scenario = sc
+        self._episode += 1
+        return sc.build(
+            self.n_archs,
+            seed=sc.seed + self._episode,
+            duration_s=self.cfg.duration_s,
+            mean_rps=self.cfg.mean_rps,
+        )
+
+    def reset(self, arrivals: Optional[np.ndarray] = None) -> np.ndarray:
+        if arrivals is not None:
+            tr = arrivals
+        elif self.scenarios:
+            tr = self._sample_arrivals()
+        else:
+            tr = self.base_arrivals
+        self.sim = ServingSim(tr, self.workload, pricing=self.cfg.pricing)
+        return self._observe(first=True)
+
+    def _observe(self, first: bool = False) -> np.ndarray:
+        self._pobs = self.sim.observe_pool()
+        if first:
+            self._prev_rate = self._pobs.rate.copy()   # trend feature = 0
+        feats = pool_features(
+            self._pobs, self._prev_rate,
+            rate_scale=self.cfg.rate_scale, fleet_scale=self.cfg.fleet_scale,
+        )
+        self._prev_rate = self._pobs.rate.copy()
+        return feats
+
+    # ------------------------------------------------------------------
+    def step(self, actions: np.ndarray) -> Tuple[np.ndarray, np.ndarray, bool, dict]:
+        """Apply per-arch factored actions; rewards decomposed per arch."""
+        assert self.sim is not None, "call reset() first"
+        metrics = self.sim.apply_pool(procurement_action(self._pobs, actions))
+        reward_arch = -self.cfg.reward_scale * (
+            metrics["cost_arch"]
+            + self.cfg.violation_penalty * metrics["violations_arch"]
+        )
+        done = self.sim.done
+        obs = (
+            np.zeros((self.n_archs, OBS_DIM), dtype=np.float32)
+            if done else self._observe()
+        )
+        return obs, reward_arch, done, metrics
+
+    # ------------------------------------------------------------------
+    def episode_result(self):
+        return self.sim.res
+
+
+class ServingEnv:
+    """Single-arch compatibility wrapper: the seed-era interface.
+
+    A thin A=1 view over :class:`PoolServingEnv` — flat ``[OBS_DIM]``
+    observations, one integer action, scalar reward — preserved so
+    stepwise drivers (``train_ppo``, the examples, the seed tests) keep
+    working and so the pool refactor stays regression-pinned to the
+    pre-refactor episode results.
     """
 
     def __init__(self, cfg: EnvConfig, trace: Optional[np.ndarray] = None, *,
@@ -77,93 +180,34 @@ class ServingEnv:
         )
         self.cfg = cfg
         self.base_trace = trace
-        self.scenarios = tuple(scenarios) if scenarios else ()
-        self._scenario_rng = np.random.default_rng(scenario_seed)
-        self._episode = 0
-        self.last_scenario: Optional[Scenario] = None
-        self.sim: Optional[ServingSim] = None
-        self._target = 1
-        self._prev_rate = 0.0
-        self._last_violations = 0.0
-
-    # ------------------------------------------------------------------
-    def _sample_arrivals(self) -> np.ndarray:
-        """One episode's arrivals: ``[1, T]`` from a sampled scenario."""
-        sc = self.scenarios[self._scenario_rng.integers(len(self.scenarios))]
-        self.last_scenario = sc
-        self._episode += 1
-        return sc.build(
-            1,
-            seed=sc.seed + self._episode,
-            duration_s=self.cfg.duration_s,
-            mean_rps=self.cfg.mean_rps,
+        self.pool = PoolServingEnv(
+            [ArchLoad(cfg.arch, 1.0, cfg.strict_frac)],
+            cfg,
+            arrivals=trace,
+            scenarios=scenarios,
+            scenario_seed=scenario_seed,
         )
+
+    @property
+    def sim(self) -> Optional[ServingSim]:
+        return self.pool.sim
+
+    @property
+    def scenarios(self):
+        return self.pool.scenarios
+
+    @property
+    def last_scenario(self) -> Optional[Scenario]:
+        return self.pool.last_scenario
 
     def reset(self, trace: Optional[np.ndarray] = None) -> np.ndarray:
-        if trace is not None:
-            tr = trace
-        elif self.scenarios:
-            tr = self._sample_arrivals()
-        else:
-            tr = self.base_trace
-        self.sim = ServingSim(
-            tr,
-            [ArchLoad(self.cfg.arch, 1.0, self.cfg.strict_frac)],
-            pricing=self.cfg.pricing,
-        )
-        st = next(iter(self.sim.states.values()))
-        self._target = st.n_active
-        arr = np.asarray(tr, dtype=np.float64)
-        self._prev_rate = float(arr[:, 0].sum() if arr.ndim == 2 else arr[0])
-        self._last_violations = 0.0
-        return self._obs_vector(self.sim.observe())
+        return self.pool.reset(trace)[0]
 
-    def _obs_vector(self, obs_dict) -> np.ndarray:
-        o = obs_dict[self.cfg.arch]
-        st = self.sim.states[self.cfg.arch]
-        rs, fs = self.cfg.rate_scale, self.cfg.fleet_scale
-        vec = np.array(
-            [
-                o.rate / rs,
-                o.ewma_rate / rs,
-                min(o.peak_to_median, 5.0) / 5.0,
-                st.queues["strict"].total / rs,
-                st.queues["relaxed"].total / rs,
-                o.n_active / fs,
-                o.n_pending / fs,
-                min(o.utilization, 2.0) / 2.0,
-                (o.rate - self._prev_rate) / rs,
-                self._last_violations / rs,
-            ],
-            dtype=np.float32,
-        )
-        self._prev_rate = o.rate
-        return vec
-
-    # ------------------------------------------------------------------
     def step(self, action: int) -> Tuple[np.ndarray, float, bool, dict]:
-        assert self.sim is not None, "call reset() first"
-        headroom = HEADROOMS[action // len(OFFLOADS)]
-        offload = OFFLOADS[action % len(OFFLOADS)]
-        st = self.sim.states[self.cfg.arch]
-        backlog = st.queues["strict"].total + st.queues["relaxed"].total
-        demand = st.monitor.rate + backlog / 5.0
-        self._target = max(1, math.ceil(headroom * demand / st.throughput))
-        metrics = self.sim.apply(
-            {self.cfg.arch: Action(target=self._target, offload=offload)}
+        obs, reward_arch, done, metrics = self.pool.step(
+            np.array([action], dtype=np.int64)
         )
-        self._last_violations = metrics["violations"]
-        reward = -self.cfg.reward_scale * (
-            metrics["cost"] + self.cfg.violation_penalty * metrics["violations"]
-        )
-        done = self.sim.done
-        obs = (
-            np.zeros(OBS_DIM, dtype=np.float32)
-            if done
-            else self._obs_vector(self.sim.observe())
-        )
-        return obs, float(reward), done, metrics
+        return obs[0], float(reward_arch.sum()), done, metrics
 
-    # ------------------------------------------------------------------
     def episode_result(self):
-        return self.sim.res
+        return self.pool.episode_result()

@@ -1,0 +1,89 @@
+"""Observation features and the factored action space of the pool
+controller (paper §V, Figure 10).
+
+One place defines how a :class:`~repro.core.sim.types.PoolObs` becomes
+the ``[A, OBS_DIM]`` feature matrix and how a per-arch discrete action
+decodes into a procurement decision, so the training environment
+(:mod:`repro.core.rl.env`) and the deployable scheduler
+(:mod:`repro.core.rl.policy`) can never drift apart.
+
+The action space is *factored per arch*: each row of the pool picks one
+of ``N_ACTIONS = len(HEADROOMS) x len(OFFLOADS)`` joint (headroom,
+offload-mode) decisions, and the policy torso is applied row-wise — a
+single parameter set controls a pool of any size A, which is what lets
+one trained controller generalize across pool compositions.
+
+Everything here is NumPy-only (no JAX): the scheduler registered in
+``VECTOR_SCHEDULERS`` runs inside the engine's hot tick loop.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sim import PoolAction, PoolObs
+
+#: reserved-fleet headroom over smoothed demand (bounded action -> stable
+#: credit assignment despite the provisioning lag)
+HEADROOMS = (0.85, 1.0, 1.15, 1.4)
+#: offload modes, index-aligned with ``repro.core.sim.OFFLOAD_MODES``
+OFFLOADS = ("none", "blind", "slack_aware")
+N_ACTIONS = len(HEADROOMS) * len(OFFLOADS)
+OBS_DIM = 10
+
+#: queued backlog is assumed drainable over this horizon when sizing the
+#: reserved fleet (same knob the Paragon scheduler uses)
+BACKLOG_DRAIN_S = 5.0
+
+_HEADROOM_ARR = np.asarray(HEADROOMS, dtype=np.float64)
+
+
+def pool_features(obs: PoolObs, prev_rate: np.ndarray, *,
+                  rate_scale: float, fleet_scale: float) -> np.ndarray:
+    """``[A, OBS_DIM]`` float32 feature matrix for one tick.
+
+    Row ``a`` holds arch ``a``'s normalized load / fleet / feedback
+    state; at A=1 this is exactly the observation vector of the legacy
+    single-arch ``ServingEnv`` (the wrapper's regression tests pin it).
+    ``prev_rate`` is the caller-held previous-tick rate used for the
+    trend feature.
+    """
+    rs, fs = rate_scale, fleet_scale
+    f = np.empty((len(obs.keys), OBS_DIM), dtype=np.float32)
+    f[:, 0] = obs.rate / rs
+    f[:, 1] = obs.ewma_rate / rs
+    f[:, 2] = np.minimum(obs.peak_to_median, 5.0) / 5.0
+    f[:, 3] = obs.queue_strict / rs
+    f[:, 4] = obs.queue_relaxed / rs
+    f[:, 5] = obs.n_active / fs
+    f[:, 6] = obs.n_pending / fs
+    f[:, 7] = np.minimum(obs.utilization, 2.0) / 2.0
+    f[:, 8] = (obs.rate - prev_rate) / rs
+    f[:, 9] = obs.last_violations / rs
+    return f
+
+
+def decode_actions(actions: np.ndarray) -> tuple:
+    """Split per-arch discrete actions into ``(headroom[A], offload[A])``.
+
+    ``offload`` comes back as the engine's integer codes (``OFFLOADS``
+    is index-aligned with ``OFFLOAD_MODES``).
+    """
+    actions = np.asarray(actions, dtype=np.int64)
+    return _HEADROOM_ARR[actions // len(OFFLOADS)], actions % len(OFFLOADS)
+
+
+def procurement_action(obs: PoolObs, actions: np.ndarray) -> PoolAction:
+    """Decode factored actions into the engine's :class:`PoolAction`.
+
+    The reserved target is ``ceil(headroom x demand / throughput)`` with
+    demand = smoothed rate + queued backlog drained over
+    ``BACKLOG_DRAIN_S`` — the same sizing rule the legacy single-arch
+    env applied per arch.
+    """
+    headroom, offload = decode_actions(actions)
+    backlog = obs.queue_strict + obs.queue_relaxed
+    demand = obs.ewma_rate + backlog / BACKLOG_DRAIN_S
+    target = np.maximum(
+        1, np.ceil(headroom * demand / obs.throughput)
+    ).astype(np.int64)
+    return PoolAction(target=target, offload=offload)

@@ -1,25 +1,42 @@
-"""Proximal Policy Optimization in pure JAX (paper §V).
+"""Proximal Policy Optimization in pure JAX (paper §V), pool-wide.
 
 The paper sketches a PPO controller with the clipped surrogate
 L(theta) = E_t[min(r_t A_t, clip(r_t, 1-eps, 1+eps) A_t)] over scheduling
-decisions; we implement the full loop: MLP policy+value nets, GAE(lambda)
-advantages, minibatched clipped updates with Adam, entropy bonus.
+decisions; we implement the full loop over the *whole serving pool*:
 
-The environment is the Python-side serving simulator; the nets, GAE and
-the update step are jitted JAX.
+* a shared MLP torso with policy+value heads, applied **per arch row**
+  (the factored action space of :mod:`repro.core.rl.obs`) — the same
+  parameters control any pool size, and one forward pass over the
+  ``[A, OBS_DIM]`` observation matrix prices every arch's action;
+* batched rollouts: buffers are ``[T, A, ...]`` arrays filled by the
+  vectorized :class:`~repro.core.rl.env.PoolServingEnv`;
+* GAE(lambda) computed over ``[T, A]`` reward/value arrays with
+  *per-arch credit assignment* — each arch's advantage stream sees its
+  own decomposed reward (engine cost attribution + violation counts),
+  not the pool average;
+* jitted minibatched clipped updates with Adam over the flattened
+  ``[T*A, OBS_DIM]`` batch, entropy bonus included.
+
+The single-arch ``train_ppo`` entry point survives as a thin shim: a
+legacy :class:`~repro.core.rl.env.ServingEnv` is just the A=1 view of
+the pool path.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Dict, List, Tuple
+from typing import List, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rl.env import N_ACTIONS, OBS_DIM, ServingEnv
+from repro.core.rl.env import (
+    N_ACTIONS,
+    OBS_DIM,
+    PoolServingEnv,
+    ServingEnv,
+)
 
 
 @dataclass(frozen=True)
@@ -41,7 +58,9 @@ class PPOConfig:
 
 
 # ---------------------------------------------------------------------------
-# Networks.
+# Networks.  The torso maps one arch's feature row to logits/value; JAX
+# broadcasting applies it to [A, F] (a pool tick) and [N, F] (an update
+# minibatch) alike — the per-arch head is vmap-free by construction.
 # ---------------------------------------------------------------------------
 def init_net(key, cfg: PPOConfig) -> dict:
     k1, k2, k3, k4 = jax.random.split(key, 4)
@@ -74,21 +93,42 @@ def policy_logits_value(params, obs):
     return _apply(params, obs)
 
 
+@jax.jit
+def _pool_action(params, obs, key):
+    """Sample per-arch actions for one pool tick: obs [A, F] -> [A]."""
+    logits, values = _apply(params, obs)
+    actions = jax.random.categorical(key, logits)
+    logp = jnp.take_along_axis(
+        jax.nn.log_softmax(logits), actions[:, None], axis=1
+    )[:, 0]
+    return actions, logp, values
+
+
+def pool_policy_action(params, obs: np.ndarray, key) -> Tuple[np.ndarray, ...]:
+    a, logp, v = _pool_action(params, jnp.asarray(obs), key)
+    return np.asarray(a), np.asarray(logp), np.asarray(v)
+
+
 def policy_action(params, obs: np.ndarray, key) -> Tuple[int, float, float]:
-    logits, value = policy_logits_value(params, jnp.asarray(obs))
-    a = jax.random.categorical(key, logits)
-    logp = jax.nn.log_softmax(logits)[a]
-    return int(a), float(logp), float(value)
+    """Single-arch convenience form (seed interface)."""
+    a, logp, v = pool_policy_action(params, np.asarray(obs)[None, :], key)
+    return int(a[0]), float(logp[0]), float(v[0])
 
 
 # ---------------------------------------------------------------------------
 # GAE.
 # ---------------------------------------------------------------------------
-def compute_gae(rewards, values, dones, last_value, gamma, lam):
-    """Numpy GAE over one rollout."""
-    T = len(rewards)
-    adv = np.zeros(T, dtype=np.float32)
-    lastgaelam = 0.0
+def compute_gae_pool(rewards, values, dones, last_value, gamma, lam):
+    """GAE over ``[T, A]`` per-arch reward/value streams.
+
+    ``dones[t]`` is the shared episode boundary (the whole pool resets
+    together); advantages are otherwise accumulated independently per
+    arch, which is the credit-assignment half of the factored action
+    space.
+    """
+    T, A = rewards.shape
+    adv = np.zeros((T, A), dtype=np.float32)
+    lastgaelam = np.zeros(A, dtype=np.float32)
     for t in reversed(range(T)):
         nonterminal = 1.0 - float(dones[t])
         next_v = last_value if t == T - 1 else values[t + 1]
@@ -97,6 +137,19 @@ def compute_gae(rewards, values, dones, last_value, gamma, lam):
         adv[t] = lastgaelam
     returns = adv + values
     return adv, returns
+
+
+def compute_gae(rewards, values, dones, last_value, gamma, lam):
+    """Single-stream GAE (seed interface): the A=1 column of the pool form."""
+    adv, ret = compute_gae_pool(
+        np.asarray(rewards, np.float32)[:, None],
+        np.asarray(values, np.float32)[:, None],
+        dones,
+        np.float32(last_value),
+        gamma,
+        lam,
+    )
+    return adv[:, 0], ret[:, 0]
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +204,16 @@ class PPOState:
     best_reward: float = float("-inf")
 
 
-def train_ppo(env: ServingEnv, cfg: PPOConfig = PPOConfig(), *, verbose: bool = False) -> PPOState:
+def train_ppo_pool(
+    env: Union[PoolServingEnv, ServingEnv],
+    cfg: PPOConfig = PPOConfig(),
+    *,
+    verbose: bool = False,
+) -> PPOState:
+    """Train the pool controller with batched ``[T, A]`` rollouts."""
+    if isinstance(env, ServingEnv):
+        env = env.pool
+    A = env.n_archs
     key = jax.random.key(cfg.seed)
     key, knet = jax.random.split(key)
     params = init_net(knet, cfg)
@@ -166,43 +228,46 @@ def train_ppo(env: ServingEnv, cfg: PPOConfig = PPOConfig(), *, verbose: bool = 
 
     for it in range(cfg.iterations):
         T = cfg.rollout_len
-        obs_buf = np.zeros((T, OBS_DIM), np.float32)
-        act_buf = np.zeros((T,), np.int32)
-        logp_buf = np.zeros((T,), np.float32)
-        val_buf = np.zeros((T,), np.float32)
-        rew_buf = np.zeros((T,), np.float32)
+        obs_buf = np.zeros((T, A, OBS_DIM), np.float32)
+        act_buf = np.zeros((T, A), np.int32)
+        logp_buf = np.zeros((T, A), np.float32)
+        val_buf = np.zeros((T, A), np.float32)
+        rew_buf = np.zeros((T, A), np.float32)
         done_buf = np.zeros((T,), np.float32)
 
         for t in range(T):
             key, kact = jax.random.split(key)
-            a, logp, v = policy_action(params, obs, kact)
+            a, logp, v = pool_policy_action(params, obs, kact)
             obs_buf[t], act_buf[t], logp_buf[t], val_buf[t] = obs, a, logp, v
-            obs, r, done, _ = env.step(a)
-            rew_buf[t], done_buf[t] = r, float(done)
-            ep_reward += r
+            obs, r_arch, done, _ = env.step(a)
+            rew_buf[t], done_buf[t] = r_arch, float(done)
+            ep_reward += float(r_arch.sum())
             if done:
                 ep_rewards.append(ep_reward)
                 ep_reward = 0.0
                 obs = env.reset()
 
         _, last_v = policy_logits_value(params, jnp.asarray(obs))
-        adv, rets = compute_gae(
-            rew_buf, val_buf, done_buf, float(last_v), cfg.gamma, cfg.gae_lambda
+        adv, rets = compute_gae_pool(
+            rew_buf, val_buf, done_buf, np.asarray(last_v, np.float32),
+            cfg.gamma, cfg.gae_lambda,
         )
         adv = (adv - adv.mean()) / (adv.std() + 1e-8)
 
-        idx = np.arange(T)
+        # flatten [T, A] -> [T*A] and update on shuffled minibatches
+        flat = {
+            "obs": obs_buf.reshape(T * A, OBS_DIM),
+            "actions": act_buf.reshape(T * A),
+            "logp_old": logp_buf.reshape(T * A),
+            "adv": adv.reshape(T * A),
+            "returns": rets.reshape(T * A),
+        }
+        idx = np.arange(T * A)
         rng = np.random.default_rng(cfg.seed + it)
         for _ in range(cfg.epochs):
             rng.shuffle(idx)
             for mb in np.array_split(idx, cfg.minibatches):
-                batch = {
-                    "obs": jnp.asarray(obs_buf[mb]),
-                    "actions": jnp.asarray(act_buf[mb]),
-                    "logp_old": jnp.asarray(logp_buf[mb]),
-                    "adv": jnp.asarray(adv[mb]),
-                    "returns": jnp.asarray(rets[mb]),
-                }
+                batch = {k: jnp.asarray(v[mb]) for k, v in flat.items()}
                 params, opt_state, loss, aux = ppo_update(
                     params, opt_state, batch, cfg
                 )
@@ -218,7 +283,7 @@ def train_ppo(env: ServingEnv, cfg: PPOConfig = PPOConfig(), *, verbose: bool = 
         history.append(
             {
                 "iter": it,
-                "rollout_reward": float(rew_buf.sum()),
+                "rollout_reward": roll_r,
                 "mean_episode_reward": mean_ep,
                 "loss": float(loss),
                 "entropy": float(aux["entropy"]),
@@ -226,7 +291,7 @@ def train_ppo(env: ServingEnv, cfg: PPOConfig = PPOConfig(), *, verbose: bool = 
         )
         if verbose and it % 5 == 0:
             print(
-                f"[ppo] it={it:3d} rollout_r={history[-1]['rollout_reward']:9.4f} "
+                f"[ppo] it={it:3d} rollout_r={roll_r:9.4f} "
                 f"ep_r={mean_ep:9.3f} H={history[-1]['entropy']:.3f}",
                 flush=True,
             )
@@ -239,21 +304,33 @@ def train_ppo(env: ServingEnv, cfg: PPOConfig = PPOConfig(), *, verbose: bool = 
     )
 
 
-def evaluate_policy(env: ServingEnv, params, *, greedy: bool = False, seed: int = 1):
-    """Run one full episode; return the SimResult.
+def train_ppo(env: ServingEnv, cfg: PPOConfig = PPOConfig(), *,
+              verbose: bool = False) -> PPOState:
+    """Seed entry point: single-arch training is the A=1 pool path."""
+    return train_ppo_pool(env, cfg, verbose=verbose)
+
+
+def evaluate_pool_policy(env: PoolServingEnv, params, *,
+                         arrivals=None, greedy: bool = False, seed: int = 1):
+    """Run one full pool episode; return the SimResult.
 
     Stochastic evaluation (the default) is the trained object: the policy
     hedges between procurement modes tick-by-tick, and argmax-collapsing
     it discards the offload behaviour it actually learned."""
     key = jax.random.key(seed)
-    obs = env.reset()
+    obs = env.reset(arrivals)
     done = False
     while not done:
         logits, _ = policy_logits_value(params, jnp.asarray(obs))
         if greedy:
-            a = int(jnp.argmax(logits))
+            a = np.asarray(jnp.argmax(logits, axis=-1))
         else:
             key, k = jax.random.split(key)
-            a = int(jax.random.categorical(k, logits))
+            a = np.asarray(jax.random.categorical(k, logits))
         obs, _, done, _ = env.step(a)
     return env.episode_result()
+
+
+def evaluate_policy(env: ServingEnv, params, *, greedy: bool = False, seed: int = 1):
+    """Single-arch evaluation (seed interface)."""
+    return evaluate_pool_policy(env.pool, params, greedy=greedy, seed=seed)

@@ -339,3 +339,10 @@ VECTOR_SCHEDULERS = {
     "paragon": VectorParagonPolicy,
     "spot_paragon": VectorSpotParagonPolicy,
 }
+
+# The learned pool controller (paper §V) rides the same vectorized
+# interface so benchmarks evaluate it head-to-head with the classical
+# schemes.  Imported late: repro.core.rl reuses the sim types above.
+from repro.core.rl.policy import RLPoolPolicy  # noqa: E402
+
+VECTOR_SCHEDULERS["rl_pool"] = RLPoolPolicy

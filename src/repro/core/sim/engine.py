@@ -264,6 +264,12 @@ class ServingSim:
         self.dropped_arch = np.zeros(n)
         self.expired_end_arch = np.zeros(n)
         self.violations_arch = np.zeros(n)
+        # per-arch reward surface: cumulative $ cost attributed to each
+        # arch (reserved/spot by held capacity, burst by invocation) and
+        # the violations booked during the previous tick — what a
+        # pool-wide controller decomposes its reward from
+        self.cost_arch = np.zeros(n)
+        self.last_viol_arch = np.zeros(n)
 
         self.states: Dict[str, ArchView] = {
             k: ArchView(self, i, w, p)
@@ -340,6 +346,9 @@ class ServingSim:
             n_spot=self.spot.active.copy(),
             throughput=self.throughput.copy(),
             utilization=self.last_util.copy(),
+            queue_strict=self.q_strict.totals().copy(),
+            queue_relaxed=self.q_relaxed.totals().copy(),
+            last_violations=self.last_viol_arch.copy(),
         )
         return self._pool_obs
 
@@ -405,6 +414,8 @@ class ServingSim:
         led = self.ledger
         res = led.res
         cost0, viol0 = res.cost_total, res.violations
+        cost0_arch = self.cost_arch.copy()
+        viol0_arch = self.violations_arch.copy()
 
         # provision: each tier runs its events + pipeline toward its target
         self.reserved.begin_tick(tick, self.rng, led)
@@ -452,6 +463,7 @@ class ServingSim:
                     )
                     self.served_burst_arch += counts
                     self.violations_arch += burst_viol
+                    self.cost_arch += self.burst.cost_per_request * counts
 
         # abandon hopeless VM-only waiters (count violation once):
         # anything older than 3x its SLO is recorded and dropped so
@@ -465,18 +477,24 @@ class ServingSim:
                 self.dropped_arch += dropped_a
                 self.violations_arch += dropped_a
 
-        # accounting
+        # accounting (cost attributed per arch as each tier posts)
         chip_s = self.reserved.account(led, self.chips)
+        self.cost_arch += chip_s * self.reserved.price_per_chip_s()
         if self._spot_live:
-            chip_s = chip_s + self.spot.account(led, self.chips)
+            spot_chip_s = self.spot.account(led, self.chips)
+            self.cost_arch += spot_chip_s * self.spot.price_per_chip_s()
+            chip_s = chip_s + spot_chip_s
         led.add_capacity(chip_s, self._rates, self.throughput, self.chips)
 
         self.tick += 1
         if self.done:
             self._finalize()
+        self.last_viol_arch = self.violations_arch - viol0_arch
         return {
             "cost": res.cost_total - cost0,
             "violations": res.violations - viol0,
+            "cost_arch": self.cost_arch - cost0_arch,
+            "violations_arch": self.last_viol_arch.copy(),
         }
 
     def _finalize(self) -> None:

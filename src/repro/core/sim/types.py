@@ -117,7 +117,10 @@ Policy = Callable[[int, Dict[str, ArchObs]], Dict[str, Action]]
 @dataclass
 class PoolObs:
     """One tick's observation for the whole pool, each field an ``[A]``
-    array aligned with ``keys``.  Field meanings match :class:`ArchObs`."""
+    array aligned with ``keys``.  Field meanings match :class:`ArchObs`;
+    the tail fields below the line have no dict counterpart — they are
+    the per-class queue split and last-tick violation feedback the
+    pool-wide RL controller's feature vector needs."""
 
     keys: List[str]
     rate: np.ndarray
@@ -130,6 +133,9 @@ class PoolObs:
     n_spot: np.ndarray
     throughput: np.ndarray
     utilization: np.ndarray
+    queue_strict: Optional[np.ndarray] = None
+    queue_relaxed: Optional[np.ndarray] = None
+    last_violations: Optional[np.ndarray] = None   # violations booked last tick
 
 
 @dataclass

@@ -1,0 +1,218 @@
+"""The pool-wide RL control path: PoolServingEnv contract, per-arch
+reward decomposition, single-arch wrapper regression pins, the batched
+PPO trainer, and the deployable RLPoolPolicy scheduler."""
+import numpy as np
+import pytest
+
+from repro.core.rl import (
+    EnvConfig,
+    N_ACTIONS,
+    OBS_DIM,
+    PPOConfig,
+    PoolServingEnv,
+    RLPoolPolicy,
+    ServingEnv,
+    evaluate_pool_policy,
+    save_policy_params,
+    train_ppo_pool,
+)
+from repro.core.schedulers import VECTOR_SCHEDULERS
+from repro.core.sim import ArchLoad, simulate, uniform_pool_workload
+from repro.core.traces import get_trace
+from repro.core.workloads import get_scenario
+
+POOL = ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b"]
+
+
+@pytest.fixture(scope="module")
+def pool_env():
+    wl = uniform_pool_workload(POOL, strict_frac=0.25)
+    cfg = EnvConfig(mean_rps=60, duration_s=150)
+    scs = [get_scenario("mmpp_bursts"), get_scenario("flash_anti")]
+    return PoolServingEnv(wl, cfg, scenarios=scs, scenario_seed=3)
+
+
+# ---------------------------------------------------------------------------
+# Regression pins: the single-arch wrapper must reproduce the
+# pre-refactor ServingEnv episode results on fixed traces.
+# ---------------------------------------------------------------------------
+def test_single_arch_wrapper_reproduces_prerefactor_episode():
+    """Golden values recorded from the dict-interface ServingEnv at the
+    PR 2 tree (cyclic action sequence over a fixed twitter trace)."""
+    trace = get_trace("twitter", 300, mean_rps=40)
+    env = ServingEnv(EnvConfig(arch="qwen1.5-0.5b", mean_rps=40), trace)
+    obs = env.reset()
+    np.testing.assert_allclose(
+        obs,
+        [0.1769973784685135, 0.1769973784685135, 0.20000000298023224,
+         0.04424934461712837, 0.13274803757667542, 0.10000000149011612,
+         0.0, 0.0, 0.0, 0.0],
+        rtol=0, atol=1e-12,
+    )
+    total, done, t = 0.0, False, 0
+    while not done:
+        obs, r, done, _ = env.step(t % N_ACTIONS)
+        total += r
+        t += 1
+    res = env.episode_result()
+    assert t == 300
+    assert total == pytest.approx(-10.0, abs=1e-9)
+    assert res.cost_total == pytest.approx(0.1, abs=1e-12)
+    assert res.violations == 0.0
+    assert res.served_vm == pytest.approx(12000.0)
+
+
+def test_single_arch_wrapper_golden_with_offload():
+    """Second pin on a demanding trace that exercises burst offload."""
+    trace = get_trace("berkeley", 400, mean_rps=80, seed=5)
+    env = ServingEnv(EnvConfig(arch="llama3-8b", mean_rps=80), trace)
+    env.reset()
+    total, done, t = 0.0, False, 0
+    while not done:
+        _, r, done, _ = env.step((7 * t + 3) % N_ACTIONS)
+        total += r
+        t += 1
+    res = env.episode_result()
+    assert total == pytest.approx(-32.6645504766, abs=1e-6)
+    assert res.cost_total == pytest.approx(0.3266455048, abs=1e-8)
+    assert res.served_burst == pytest.approx(1770.9989036054, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pool env contract.
+# ---------------------------------------------------------------------------
+def test_pool_env_reset_determinism():
+    """Same scenario_seed -> identical episode sequences (arrivals AND
+    observations); consecutive episodes differ (fresh realizations)."""
+    wl = uniform_pool_workload(POOL, strict_frac=0.25)
+    cfg = EnvConfig(mean_rps=60, duration_s=120)
+    scs = [get_scenario("mmpp_bursts"), get_scenario("diurnal_phases")]
+    e1 = PoolServingEnv(wl, cfg, scenarios=scs, scenario_seed=5)
+    e2 = PoolServingEnv(wl, cfg, scenarios=scs, scenario_seed=5)
+    o1, o2 = e1.reset(), e2.reset()
+    np.testing.assert_array_equal(o1, o2)
+    np.testing.assert_array_equal(e1.sim.arrivals, e2.sim.arrivals)
+    assert e1.last_scenario.name == e2.last_scenario.name
+    ep1 = e1.sim.arrivals.copy()
+    e1.reset()
+    assert not np.array_equal(e1.sim.arrivals, ep1)   # fresh realization
+    assert e1.sim.arrivals.shape == (len(wl), 120)
+
+
+def test_pool_env_obs_parity_with_single_arch_wrapper():
+    """At A=1 the pool env's [1, OBS_DIM] rows equal the wrapper's flat
+    observation, tick for tick, under the same action stream."""
+    cfg = EnvConfig(arch="qwen1.5-0.5b", mean_rps=40, duration_s=200)
+    trace = get_trace("twitter", 200, mean_rps=40)
+    pool = PoolServingEnv([ArchLoad(cfg.arch, 1.0, cfg.strict_frac)], cfg,
+                          arrivals=trace)
+    single = ServingEnv(cfg, trace)
+    op, os_ = pool.reset(), single.reset()
+    assert op.shape == (1, OBS_DIM)
+    np.testing.assert_array_equal(op[0], os_)
+    done = False
+    t = 0
+    while not done:
+        a = (5 * t + 1) % N_ACTIONS
+        op, rp, done, _ = pool.step(np.array([a]))
+        os_, rs, done_s, _ = single.step(a)
+        assert done == done_s
+        np.testing.assert_array_equal(op[0], os_)
+        assert float(rp.sum()) == pytest.approx(rs, abs=1e-12)
+        t += 1
+    assert pool.episode_result().summary() == single.episode_result().summary()
+
+
+def test_pool_reward_decomposition_sums_to_pool_reward(pool_env):
+    """The [A] reward vector must sum to the scalar pool reward computed
+    from the ledger's marginal cost/violations, every tick."""
+    cfg = pool_env.cfg
+    pool_env.reset()
+    rng = np.random.default_rng(0)
+    done = False
+    while not done:
+        a = rng.integers(0, N_ACTIONS, size=pool_env.n_archs)
+        _, r_arch, done, m = pool_env.step(a)
+        assert r_arch.shape == (pool_env.n_archs,)
+        scalar = -cfg.reward_scale * (
+            m["cost"] + cfg.violation_penalty * m["violations"]
+        )
+        assert float(r_arch.sum()) == pytest.approx(scalar, abs=1e-9)
+        # and the engine's per-arch marginals sum to the ledger marginals
+        assert float(m["cost_arch"].sum()) == pytest.approx(m["cost"], abs=1e-12)
+        assert float(m["violations_arch"].sum()) == pytest.approx(
+            m["violations"], abs=1e-9
+        )
+
+
+def test_pool_env_runs_all_zoo_scenarios():
+    wl = uniform_pool_workload(POOL[:2], strict_frac=0.25)
+    cfg = EnvConfig(mean_rps=30, duration_s=60)
+    env = PoolServingEnv(wl, cfg, scenarios=[get_scenario("diurnal_flash_splice")])
+    env.reset()
+    done, steps = False, 0
+    while not done:
+        _, r, done, _ = env.step(np.full(2, steps % N_ACTIONS))
+        assert np.isfinite(r).all()
+        steps += 1
+    assert steps == 60
+
+
+# ---------------------------------------------------------------------------
+# Batched PPO on a tiny pool.
+# ---------------------------------------------------------------------------
+def test_ppo_pool_smoke_three_iterations():
+    wl = uniform_pool_workload(POOL[:2], strict_frac=0.25)
+    cfg = EnvConfig(mean_rps=30, duration_s=80)
+    env = PoolServingEnv(wl, cfg, scenarios=[get_scenario("mmpp_bursts")],
+                         scenario_seed=2)
+    state = train_ppo_pool(env, PPOConfig(iterations=3, rollout_len=80,
+                                          hidden=16, seed=1))
+    assert len(state.history) == 3
+    assert np.isfinite(state.best_reward)
+    assert state.best_reward >= state.history[0]["rollout_reward"]
+    res = evaluate_pool_policy(env, state.params, seed=3)
+    assert res.total_requests > 0
+    assert res.violation_rate < 0.5
+
+
+# ---------------------------------------------------------------------------
+# The deployable scheduler.
+# ---------------------------------------------------------------------------
+def test_rl_pool_registered_in_vector_schedulers():
+    assert VECTOR_SCHEDULERS["rl_pool"] is RLPoolPolicy
+    assert getattr(RLPoolPolicy, "vectorized", False)
+
+
+def test_rl_pool_policy_runs_and_is_deterministic(tmp_path):
+    wl = uniform_pool_workload(POOL, strict_frac=0.25)
+    arrivals = get_scenario("flash_anti").build(len(wl), duration_s=120,
+                                                mean_rps=50)
+    missing = str(tmp_path / "nope.json")
+    with pytest.warns(UserWarning, match="UNTRAINED"):
+        p1 = RLPoolPolicy(checkpoint=missing, seed=7)
+    with pytest.warns(UserWarning, match="UNTRAINED"):
+        p2 = RLPoolPolicy(checkpoint=missing, seed=7)
+    assert not p1.trained
+    r1 = simulate(arrivals, wl, p1)
+    r2 = simulate(arrivals, wl, p2)
+    assert r1.summary() == r2.summary()
+    assert r1.total_requests == pytest.approx(float(arrivals.sum()))
+
+
+def test_policy_checkpoint_roundtrip(tmp_path):
+    """Saved + reloaded params must drive identical greedy decisions."""
+    wl = uniform_pool_workload(POOL[:2], strict_frac=0.25)
+    cfg = EnvConfig(mean_rps=30, duration_s=60)
+    env = PoolServingEnv(wl, cfg, scenarios=[get_scenario("mmpp_bursts")])
+    state = train_ppo_pool(env, PPOConfig(iterations=1, rollout_len=60,
+                                          hidden=16))
+    path = str(tmp_path / "ckpt.json")
+    save_policy_params(state.params, path, meta={"test": True})
+    arrivals = get_scenario("mmpp_bursts").build(2, duration_s=90, mean_rps=30)
+    a = simulate(arrivals, wl,
+                 RLPoolPolicy(params=state.params, greedy=True)).summary()
+    loaded = RLPoolPolicy(checkpoint=path, greedy=True)
+    assert loaded.trained
+    b = simulate(arrivals, wl, loaded).summary()
+    assert a == b

@@ -178,7 +178,9 @@ def test_spot_unused_costs_nothing():
 # ---------------------------------------------------------------------------
 # Vectorized policy interface.
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("policy", sorted(VECTOR_SCHEDULERS))
+@pytest.mark.parametrize(
+    "policy", sorted(set(VECTOR_SCHEDULERS) & set(SCHEDULERS))
+)
 def test_vector_policy_matches_dict_policy(policy):
     trace = get_trace("berkeley", 400, mean_rps=90)
     wl = uniform_pool_workload(SEED_ARCHS, strict_frac=0.25)

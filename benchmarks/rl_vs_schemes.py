@@ -174,6 +174,49 @@ def run(iterations: int = ITERATIONS) -> bool:
 
     thr = _rollout_throughput_64(state.params, envcfg)
 
+    # -- zero-shot generalization: the A=8-trained controller at A=64 ------
+    # (ROADMAP generalization study, smoke scale: the shared row-wise
+    # torso makes this a pure eval task — same params, 8x the rows, no
+    # retraining; per-arch demand held at the training level)
+    A64 = 64
+    wl64 = replicate_pool(SERVING_POOL, A64, strict_frac=STRICT_FRAC)
+    rps64 = MEAN_RPS * A64 / len(wl)
+    zero_shot: Dict[str, dict] = {
+        "train_pool_size": len(wl), "eval_pool_size": A64,
+        "mean_rps": rps64, "grid": {},
+    }
+    for name in ("mmpp_bursts", "flash_anti"):
+        sc = SCENARIO_ZOO[name]
+        arrivals = sc.build(
+            A64, seed=sc.seed + EVAL_SEED_OFFSET + 1,
+            duration_s=EVAL_DURATION_S, mean_rps=rps64,
+        )
+        cell: Dict[str, dict] = {}
+        for pol_name in ("reactive", "paragon"):
+            res = simulate(arrivals, wl64, VECTOR_SCHEDULERS[pol_name]())
+            cell[pol_name] = {
+                **res.summary(),
+                "objective": round(
+                    _objective(res.summary(), res.total_requests), 4
+                ),
+            }
+        res = simulate(arrivals, wl64, RLPoolPolicy(params=state.params,
+                                                    seed=13))
+        cell["rl_pool"] = {
+            **res.summary(),
+            "objective": round(_objective(res.summary(), res.total_requests), 4),
+        }
+        best = min(("reactive", "paragon"),
+                   key=lambda p: cell[p]["objective"])
+        cell["best_classical"] = best
+        cell["rl_obj_over_best_classical"] = round(
+            cell["rl_pool"]["objective"] / max(cell[best]["objective"], 1e-9), 4
+        )
+        zero_shot["grid"][name] = cell
+    zs_ratios = [c["rl_obj_over_best_classical"]
+                 for c in zero_shot["grid"].values()]
+    zero_shot["median_obj_ratio"] = float(np.median(zs_ratios))
+
     n_wins = int(np.sum(wins))
     n_obj_wins = int(sum(g["rl_wins_blended_objective"] for g in gaps.values()))
     claims = {
@@ -182,6 +225,7 @@ def run(iterations: int = ITERATIONS) -> bool:
         "rl_wins_cost_at_leq_violations": n_wins,
         "rl_wins_blended_objective": n_obj_wins,
         "per_scenario_gap": gaps,
+        "zero_shot": zero_shot,
         "explanation": (
             "A cost win means the trained pool controller undercuts the "
             "cheapest classical scheduler's raw cost on that scenario while "
@@ -247,6 +291,11 @@ def run(iterations: int = ITERATIONS) -> bool:
          "objective on >= 1 scenario", n_obj_wins >= 1),
         ("rl_obj_over_best_median", float(np.median(obj_ratios)),
          "median blended-objective ratio vs best classical (reported)", True),
+        ("zero_shot_obj_ratio_a64", zero_shot["median_obj_ratio"],
+         "A=8-trained controller evaluated zero-shot at A=64: median "
+         "blended-objective ratio vs best classical (gap recorded in "
+         "claims.zero_shot)",
+         bool(np.isfinite(zs_ratios).all())),
         ("rollout_ticks_per_s_a64", thr["ticks_per_s"],
          "PoolServingEnv+policy rollout throughput at A=64", True),
     ]

@@ -24,6 +24,7 @@ from benchmarks import (
     scenario_grid,
     sim_throughput,
     spot_tier,
+    variant_grid,
 )
 
 BENCHES = {
@@ -38,6 +39,7 @@ BENCHES = {
     "roofline": roofline.run,
     "scenario_grid": scenario_grid.run,
     "sim_throughput": sim_throughput.run,
+    "variant_grid": variant_grid.run,
 }
 
 

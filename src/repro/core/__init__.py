@@ -39,6 +39,8 @@ from repro.core.sim import (  # noqa: F401
     PoolAction,
     PoolObs,
     SimResult,
+    Variant,
+    VariantCatalog,
     replicate_pool,
     simulate,
     uniform_pool_workload,

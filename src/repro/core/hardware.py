@@ -48,6 +48,11 @@ class FleetPricing:
     spot_discount: float = 0.3             # spot $/chip-hour = reserved x this
     spot_preempt_rate: float = 1.0 / 1800  # Poisson reclaim: ~1 per 30 min
     spot_provision_s: float = 120.0        # same slice acquisition latency
+    # --- model-variant swaps (INFaaS-style model-less serving) ----------
+    variant_swap_s: float = 60.0           # weight reload onto held slices;
+                                           # faster than acquiring a slice,
+                                           # not free (serves at the OLD
+                                           # variant's rate meanwhile)
 
     @property
     def reserved_chip_s(self) -> float:

@@ -9,6 +9,12 @@ maps it to a member of the model pool:
   ``paragon`` — the paper's scheme: among ALL models satisfying both the
                 accuracy and the latency constraints, pick the one with the
                 least serving cost ("chooses the least costing model").
+
+The accuracy/latency candidate filter itself lives with the runtime
+variant axis (:func:`repro.core.sim.types.filter_pool_candidates`) — the
+offline selector here and the engine's :class:`~repro.core.sim.types.VariantCatalog`
+are two consumers of the same predicate, so the offline and runtime
+accuracy axes cannot drift.
 """
 from __future__ import annotations
 
@@ -16,6 +22,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.profiles import RequestClass, STANDARD, model_pool
+from repro.core.sim.types import filter_pool_candidates
 
 
 @dataclass(frozen=True)
@@ -29,19 +36,19 @@ class NoFeasibleModel(Exception):
 
 
 def feasible_set(c: Constraint, req: RequestClass = STANDARD) -> Dict[str, dict]:
-    pool = model_pool(req)
-    return {
-        a: e
-        for a, e in pool.items()
-        if e["accuracy"] >= c.min_accuracy and e["latency_s"] <= c.max_latency_s
-    }
+    return filter_pool_candidates(
+        model_pool(req),
+        min_accuracy=c.min_accuracy,
+        max_latency_s=c.max_latency_s,
+    )
 
 
 def select_naive(c: Constraint, req: RequestClass = STANDARD) -> str:
     """Max-accuracy-within-latency, oblivious to cost and to the accuracy
     constraint actually requested (it always over-delivers)."""
-    pool = model_pool(req)
-    cands = {a: e for a, e in pool.items() if e["latency_s"] <= c.max_latency_s}
+    cands = filter_pool_candidates(
+        model_pool(req), max_latency_s=c.max_latency_s
+    )
     if not cands:
         raise NoFeasibleModel(str(c))
     return max(cands, key=lambda a: cands[a]["accuracy"])

@@ -21,10 +21,14 @@ from repro.core.rl.env import (  # noqa: F401
 from repro.core.rl.obs import (  # noqa: F401
     HEADROOMS,
     N_ACTIONS,
+    N_PROCURE,
     OBS_DIM,
     OFFLOADS,
+    VARIANT_MOVES,
+    decode_actions,
     pool_features,
     procurement_action,
+    variant_targets,
 )
 from repro.core.rl.policy import (  # noqa: F401
     DEFAULT_CHECKPOINT,

@@ -48,12 +48,14 @@ from repro.core.hardware import PRICING, FleetPricing
 from repro.core.rl.obs import (  # noqa: F401  (re-exported seed surface)
     HEADROOMS,
     N_ACTIONS,
+    N_PROCURE,
     OBS_DIM,
     OFFLOADS,
+    VARIANT_MOVES,
     pool_features,
     procurement_action,
 )
-from repro.core.sim import ArchLoad, ServingSim
+from repro.core.sim import ArchLoad, ServingSim, VariantCatalog
 from repro.core.workloads import Scenario
 
 
@@ -64,6 +66,10 @@ class EnvConfig:
     mean_rps: float = 60.0
     duration_s: int = 1200
     violation_penalty: float = 0.005      # $ equivalent per violated request
+    accuracy_bonus: float = 0.0           # $ credit per answered request x
+                                          # delivered accuracy — what makes
+                                          # the variant head trade accuracy
+                                          # against cost (0 = cost/SLO only)
     reward_scale: float = 100.0           # keep per-tick rewards O(0.1)
     pricing: FleetPricing = PRICING
     rate_scale: float = 100.0             # normalization constants
@@ -91,13 +97,15 @@ class PoolServingEnv:
     def __init__(self, workload: Sequence[ArchLoad], cfg: EnvConfig = EnvConfig(),
                  arrivals: Optional[np.ndarray] = None, *,
                  scenarios: Optional[Sequence[Scenario]] = None,
-                 scenario_seed: int = 0):
+                 scenario_seed: int = 0,
+                 catalog: Optional[VariantCatalog] = None):
         assert arrivals is not None or scenarios, (
             "PoolServingEnv needs a fixed arrival matrix or a scenario pool"
         )
         self.workload: List[ArchLoad] = list(workload)
         self.n_archs = len(self.workload)
         self.cfg = cfg
+        self.catalog = catalog         # opens the variant head's state space
         self.base_arrivals = arrivals
         self.scenarios = tuple(scenarios) if scenarios else ()
         self._scenario_rng = np.random.default_rng(scenario_seed)
@@ -127,7 +135,8 @@ class PoolServingEnv:
             tr = self._sample_arrivals()
         else:
             tr = self.base_arrivals
-        self.sim = ServingSim(tr, self.workload, pricing=self.cfg.pricing)
+        self.sim = ServingSim(tr, self.workload, pricing=self.cfg.pricing,
+                              catalog=self.catalog)
         return self._observe(first=True)
 
     def _observe(self, first: bool = False) -> np.ndarray:
@@ -149,6 +158,7 @@ class PoolServingEnv:
         reward_arch = -self.cfg.reward_scale * (
             metrics["cost_arch"]
             + self.cfg.violation_penalty * metrics["violations_arch"]
+            - self.cfg.accuracy_bonus * metrics["accuracy_arch"]
         )
         done = self.sim.done
         obs = (
@@ -174,7 +184,8 @@ class ServingEnv:
 
     def __init__(self, cfg: EnvConfig, trace: Optional[np.ndarray] = None, *,
                  scenarios: Optional[Sequence[Scenario]] = None,
-                 scenario_seed: int = 0):
+                 scenario_seed: int = 0,
+                 catalog: Optional[VariantCatalog] = None):
         assert trace is not None or scenarios, (
             "ServingEnv needs a fixed trace or a scenario pool"
         )
@@ -186,6 +197,7 @@ class ServingEnv:
             arrivals=trace,
             scenarios=scenarios,
             scenario_seed=scenario_seed,
+            catalog=catalog,
         )
 
     @property

@@ -8,10 +8,15 @@ decodes into a procurement decision, so the training environment
 (:mod:`repro.core.rl.policy`) can never drift apart.
 
 The action space is *factored per arch*: each row of the pool picks one
-of ``N_ACTIONS = len(HEADROOMS) x len(OFFLOADS)`` joint (headroom,
-offload-mode) decisions, and the policy torso is applied row-wise — a
-single parameter set controls a pool of any size A, which is what lets
-one trained controller generalize across pool compositions.
+of ``N_ACTIONS = len(HEADROOMS) x len(OFFLOADS) x len(VARIANT_MOVES)``
+joint (headroom, offload-mode, variant-move) decisions, and the policy
+torso is applied row-wise — a single parameter set controls a pool of
+any size A, which is what lets one trained controller generalize across
+pool compositions.  The variant head is the model-heterogeneity half of
+the paper's joint decision space: ``down`` / ``hold`` / ``up`` steps
+along the arch's accuracy-ordered variant set (``hold`` first, so the
+``N_PROCURE`` legacy actions ``0 .. 11`` decode exactly as the
+pre-variant space did).
 
 Everything here is NumPy-only (no JAX): the scheduler registered in
 ``VECTOR_SCHEDULERS`` runs inside the engine's hot tick loop.
@@ -27,14 +32,19 @@ from repro.core.sim import PoolAction, PoolObs
 HEADROOMS = (0.85, 1.0, 1.15, 1.4)
 #: offload modes, index-aligned with ``repro.core.sim.OFFLOAD_MODES``
 OFFLOADS = ("none", "blind", "slack_aware")
-N_ACTIONS = len(HEADROOMS) * len(OFFLOADS)
-OBS_DIM = 10
+#: the variant head: hold-first so actions < N_PROCURE are the legacy space
+VARIANT_MOVES = ("hold", "down", "up")
+N_PROCURE = len(HEADROOMS) * len(OFFLOADS)
+N_ACTIONS = N_PROCURE * len(VARIANT_MOVES)
+OBS_DIM = 12
 
 #: queued backlog is assumed drainable over this horizon when sizing the
 #: reserved fleet (same knob the Paragon scheduler uses)
 BACKLOG_DRAIN_S = 5.0
 
 _HEADROOM_ARR = np.asarray(HEADROOMS, dtype=np.float64)
+#: VARIANT_MOVES index -> signed step along the variant set
+_VMOVE_DELTA = np.array([0, -1, 1], dtype=np.int64)
 
 
 def pool_features(obs: PoolObs, prev_rate: np.ndarray, *,
@@ -42,10 +52,10 @@ def pool_features(obs: PoolObs, prev_rate: np.ndarray, *,
     """``[A, OBS_DIM]`` float32 feature matrix for one tick.
 
     Row ``a`` holds arch ``a``'s normalized load / fleet / feedback
-    state; at A=1 this is exactly the observation vector of the legacy
-    single-arch ``ServingEnv`` (the wrapper's regression tests pin it).
-    ``prev_rate`` is the caller-held previous-tick rate used for the
-    trend feature.
+    state plus the variant axis: the active variant's position in the
+    arch's ordered set and the accuracy headroom over the stream's
+    floor.  ``prev_rate`` is the caller-held previous-tick rate used for
+    the trend feature.
     """
     rs, fs = rate_scale, fleet_scale
     f = np.empty((len(obs.keys), OBS_DIM), dtype=np.float32)
@@ -59,17 +69,34 @@ def pool_features(obs: PoolObs, prev_rate: np.ndarray, *,
     f[:, 7] = np.minimum(obs.utilization, 2.0) / 2.0
     f[:, 8] = (obs.rate - prev_rate) / rs
     f[:, 9] = obs.last_violations / rs
+    f[:, 10] = obs.active_variant / np.maximum(obs.n_variants - 1, 1)
+    f[:, 11] = np.clip(obs.accuracy - obs.accuracy_floor, 0.0, 1.0)
     return f
 
 
 def decode_actions(actions: np.ndarray) -> tuple:
-    """Split per-arch discrete actions into ``(headroom[A], offload[A])``.
+    """Split per-arch discrete actions into ``(headroom[A], offload[A],
+    vmove[A])``.
 
     ``offload`` comes back as the engine's integer codes (``OFFLOADS``
-    is index-aligned with ``OFFLOAD_MODES``).
+    is index-aligned with ``OFFLOAD_MODES``); ``vmove`` is the signed
+    variant step in ``{-1, 0, +1}``.
     """
     actions = np.asarray(actions, dtype=np.int64)
-    return _HEADROOM_ARR[actions // len(OFFLOADS)], actions % len(OFFLOADS)
+    proc = actions % N_PROCURE
+    vmove = _VMOVE_DELTA[actions // N_PROCURE]
+    return _HEADROOM_ARR[proc // len(OFFLOADS)], proc % len(OFFLOADS), vmove
+
+
+def variant_targets(obs: PoolObs, vmove: np.ndarray) -> np.ndarray:
+    """Signed variant steps -> engine ``variant_target`` codes.
+
+    Steps are clipped to the arch's variant range; a step that lands on
+    the active variant (hold, or a clipped edge move) becomes the
+    engine's hold code (-1).
+    """
+    tgt = np.clip(obs.active_variant + vmove, 0, obs.n_variants - 1)
+    return np.where(tgt == obs.active_variant, -1, tgt).astype(np.int64)
 
 
 def procurement_action(obs: PoolObs, actions: np.ndarray) -> PoolAction:
@@ -78,12 +105,14 @@ def procurement_action(obs: PoolObs, actions: np.ndarray) -> PoolAction:
     The reserved target is ``ceil(headroom x demand / throughput)`` with
     demand = smoothed rate + queued backlog drained over
     ``BACKLOG_DRAIN_S`` — the same sizing rule the legacy single-arch
-    env applied per arch.
+    env applied per arch.  ``throughput`` is the ACTIVE variant's, so
+    fleet sizing and variant choice stay coupled.
     """
-    headroom, offload = decode_actions(actions)
+    headroom, offload, vmove = decode_actions(actions)
     backlog = obs.queue_strict + obs.queue_relaxed
     demand = obs.ewma_rate + backlog / BACKLOG_DRAIN_S
     target = np.maximum(
         1, np.ceil(headroom * demand / obs.throughput)
     ).astype(np.int64)
-    return PoolAction(target=target, offload=offload)
+    return PoolAction(target=target, offload=offload,
+                      variant_target=variant_targets(obs, vmove))

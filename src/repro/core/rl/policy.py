@@ -136,8 +136,23 @@ class RLPoolPolicy:
     def __post_init__(self):
         if self.params is None:
             self.params, meta = load_policy_checkpoint(self.checkpoint)
-            self.trained = self.params is not None
-            if self.params is None:
+            if self.params is not None and (
+                self.params["torso1"]["w"].shape[0] != OBS_DIM
+                or self.params["pi"]["w"].shape[1] != N_ACTIONS
+            ):
+                # a checkpoint trained under an older obs/action space
+                # (e.g. pre-variant-head) cannot drive this policy
+                warnings.warn(
+                    f"RLPoolPolicy: checkpoint at {self.checkpoint!r} is "
+                    f"STALE (obs {self.params['torso1']['w'].shape[0]} vs "
+                    f"{OBS_DIM}, actions {self.params['pi']['w'].shape[1]} "
+                    f"vs {N_ACTIONS}); falling back to seeded random "
+                    "(UNTRAINED) weights — re-run `python -m benchmarks.run "
+                    "--only rl` to retrain",
+                    stacklevel=2,
+                )
+                self.params = None
+            elif self.params is None:
                 warnings.warn(
                     f"RLPoolPolicy: no checkpoint at {self.checkpoint!r}; "
                     "falling back to seeded random (UNTRAINED) weights — "
@@ -145,6 +160,8 @@ class RLPoolPolicy:
                     "publish one",
                     stacklevel=2,
                 )
+            self.trained = self.params is not None
+            if self.params is None:
                 self.params = _fallback_params(self.seed)
             else:
                 # deploy with the normalization the checkpoint trained under

@@ -194,6 +194,113 @@ SCHEDULERS["spot_paragon"] = SpotParagonPolicy
 
 
 # ---------------------------------------------------------------------------
+# Variant-aware policies (the model-heterogeneity half of the paper's
+# joint model x resource decision space).  Both ride on Paragon's
+# class-aware procurement and add a ``variant`` decision per arch; on a
+# variant-blind engine run (single-variant catalog) they degrade to
+# exactly Paragon.
+# ---------------------------------------------------------------------------
+def _swap_aware_target_scalar(o: ArchObs, bursty_threshold: float,
+                              flat_cushion: float,
+                              drain_horizon_s: float) -> int:
+    """Paragon sizing against the slower of the active / in-flight
+    variant's service rate — the dict-form analog of the vector
+    :func:`_swap_aware_target`, shared by both variant-aware dict
+    policies so the rule cannot diverge between them."""
+    bursty = o.peak_to_median >= bursty_threshold
+    headroom = 1.0 if bursty else flat_cushion
+    demand = o.ewma_rate + o.queue_len / drain_horizon_s
+    thr = o.throughput * min(1.0, o.variant_pending_ratio)
+    return max(1, math.ceil(demand * headroom / thr))
+
+
+@dataclass
+class InfaasVariantPolicy(ParagonPolicy):
+    """INFaaS-style variant tuning: upgrade on slack, downgrade on queue
+    pressure (along the accuracy-ordered variant set, never below the
+    stream's accuracy floor), with a per-arch cooldown so the swap
+    pipeline is not thrashed.
+
+    Swap-aware guards: a downgrade must land on a strictly *faster*
+    variant (pressure wants service rate, and accuracy order does not
+    imply rate order), an upgrade must keep the projected post-swap
+    utilization under ``post_swap_util``, and while a swap is in flight
+    the fleet is sized for the slower of the old/new service rates (the
+    reload lands before provisioning could catch up otherwise)."""
+
+    up_util: float = 0.55          # upgrade only when the fleet has slack
+    down_util: float = 0.9         # downgrade when saturated / backlogged
+    post_swap_util: float = 0.75   # projected utilization bound after an
+                                   # upgrade lands
+    queue_pressure_s: float = 2.0  # backlog worth this many seconds of
+                                   # service counts as pressure
+    cooldown_s: int = 120
+    _last_move: Dict[str, int] = field(default_factory=dict)
+
+    def __call__(self, tick: int, obs: Dict[str, ArchObs]) -> Dict[str, Action]:
+        out = super().__call__(tick, obs)
+        for a, o in obs.items():
+            out[a].target = _swap_aware_target_scalar(
+                o, self.bursty_threshold, self.flat_cushion,
+                self.drain_horizon_s,
+            )
+            if (
+                o.variant_in_flight
+                or tick - self._last_move.get(a, -(10**9)) < self.cooldown_s
+            ):
+                continue
+            cap = max(o.n_active, 1) * o.throughput
+            # queue_len includes this tick's (not yet served) arrivals;
+            # pressure / slack are about the carried-over backlog
+            backlog = o.queue_len - o.rate
+            pressure = (
+                o.utilization >= self.down_util
+                or backlog > self.queue_pressure_s * cap
+            )
+            slack = o.utilization <= self.up_util and backlog <= 1e-6
+            if (
+                pressure
+                and o.active_variant > o.variant_lo
+                and o.variant_down_ratio > 1.0 + 1e-9
+            ):
+                out[a].variant = o.active_variant - 1
+                self._last_move[a] = tick
+            elif (
+                slack
+                and not pressure
+                and o.active_variant < o.n_variants - 1
+                and o.utilization / o.variant_up_ratio <= self.post_swap_util
+            ):
+                out[a].variant = o.active_variant + 1
+                self._last_move[a] = tick
+        return out
+
+
+@dataclass
+class AccuracyFloorPolicy(ParagonPolicy):
+    """Constraint-first variant choice: pin every arch to the cheapest
+    variant meeting its accuracy floor (the runtime form of the paper's
+    least-cost selection, recomputed as swaps land).  Sizing is
+    swap-aware: while a reload is in flight the fleet covers the slower
+    of the old/new service rates."""
+
+    def __call__(self, tick: int, obs: Dict[str, ArchObs]) -> Dict[str, Action]:
+        out = super().__call__(tick, obs)
+        for a, o in obs.items():
+            out[a].target = _swap_aware_target_scalar(
+                o, self.bursty_threshold, self.flat_cushion,
+                self.drain_horizon_s,
+            )
+            if not o.variant_in_flight and o.active_variant != o.variant_cheapest:
+                out[a].variant = o.variant_cheapest
+        return out
+
+
+SCHEDULERS["infaas_variant"] = InfaasVariantPolicy
+SCHEDULERS["accuracy_floor"] = AccuracyFloorPolicy
+
+
+# ---------------------------------------------------------------------------
 # Vectorized policies (structure-of-arrays, for pool-scale simulations).
 #
 # Same decision rules as their dict counterparts above, expressed over
@@ -331,6 +438,84 @@ class VectorSpotParagonPolicy(VectorParagonPolicy):
         )
 
 
+def _swap_aware_target(obs: PoolObs, bursty_threshold: float,
+                       flat_cushion: float, drain_horizon_s: float) -> np.ndarray:
+    """Paragon sizing against the slower of the active / in-flight
+    variant's service rate (shared by the variant-aware vector policies)."""
+    bursty = obs.peak_to_median >= bursty_threshold
+    headroom = np.where(bursty, 1.0, flat_cushion)
+    demand = obs.ewma_rate + obs.queue_len / drain_horizon_s
+    thr = obs.throughput * np.minimum(1.0, obs.variant_pending_ratio)
+    return _scale_target_vec(thr, demand, headroom)
+
+
+@dataclass
+class VectorInfaasVariantPolicy(VectorParagonPolicy):
+    """Vector form of :class:`InfaasVariantPolicy` (same knobs, same
+    decisions, the per-arch cooldown dict an ``[A]`` array)."""
+
+    up_util: float = 0.55
+    down_util: float = 0.9
+    post_swap_util: float = 0.75
+    queue_pressure_s: float = 2.0
+    cooldown_s: int = 120
+    _last_move: np.ndarray = None
+
+    def __call__(self, tick: int, obs: PoolObs) -> PoolAction:
+        act = super().__call__(tick, obs)
+        act.target = _swap_aware_target(
+            obs, self.bursty_threshold, self.flat_cushion, self.drain_horizon_s
+        )
+        n = len(obs.keys)
+        if self._last_move is None:
+            self._last_move = np.full(n, -(10**9), dtype=np.int64)
+        cap = np.maximum(obs.n_active, 1) * obs.throughput
+        # queue_len includes this tick's (not yet served) arrivals;
+        # pressure / slack are about the carried-over backlog
+        backlog = obs.queue_len - obs.rate
+        pressure = (obs.utilization >= self.down_util) | (
+            backlog > self.queue_pressure_s * cap
+        )
+        slack = (obs.utilization <= self.up_util) & (backlog <= 1e-6)
+        ready = (~obs.variant_in_flight) & (
+            tick - self._last_move >= self.cooldown_s
+        )
+        down = (
+            pressure & ready
+            & (obs.active_variant > obs.variant_lo)
+            & (obs.variant_down_ratio > 1.0 + 1e-9)
+        )
+        up = (
+            slack & ~pressure & ready
+            & (obs.active_variant < obs.n_variants - 1)
+            & (obs.utilization / obs.variant_up_ratio <= self.post_swap_util)
+        )
+        tgt = np.full(n, -1, dtype=np.int64)
+        tgt[down] = obs.active_variant[down] - 1
+        tgt[up] = obs.active_variant[up] + 1
+        self._last_move = np.where(down | up, tick, self._last_move)
+        act.variant_target = tgt
+        return act
+
+
+@dataclass
+class VectorAccuracyFloorPolicy(VectorParagonPolicy):
+    """Vector form of :class:`AccuracyFloorPolicy`."""
+
+    def __call__(self, tick: int, obs: PoolObs) -> PoolAction:
+        act = super().__call__(tick, obs)
+        act.target = _swap_aware_target(
+            obs, self.bursty_threshold, self.flat_cushion, self.drain_horizon_s
+        )
+        act.variant_target = np.where(
+            (~obs.variant_in_flight)
+            & (obs.active_variant != obs.variant_cheapest),
+            obs.variant_cheapest,
+            -1,
+        ).astype(np.int64)
+        return act
+
+
 VECTOR_SCHEDULERS = {
     "reactive": VectorReactivePolicy,
     "util_aware": VectorUtilAwarePolicy,
@@ -338,6 +523,8 @@ VECTOR_SCHEDULERS = {
     "mixed": VectorMixedPolicy,
     "paragon": VectorParagonPolicy,
     "spot_paragon": VectorSpotParagonPolicy,
+    "infaas_variant": VectorInfaasVariantPolicy,
+    "accuracy_floor": VectorAccuracyFloorPolicy,
 }
 
 # The learned pool controller (paper §V) rides the same vectorized

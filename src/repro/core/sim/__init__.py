@@ -22,6 +22,7 @@ from repro.core.sim.fleet import (  # noqa: F401
     ProvisionPipeline,
     ResourceTier,
     SpotTier,
+    SwapPipeline,
 )
 from repro.core.sim.queues import BucketQueue, QueueArray  # noqa: F401
 from repro.core.sim.reference import ReferenceSim, simulate_reference  # noqa: F401
@@ -39,7 +40,10 @@ from repro.core.sim.types import (  # noqa: F401
     Policy,
     PoolAction,
     PoolObs,
+    Variant,
+    VariantCatalog,
     VectorPolicy,
+    filter_pool_candidates,
     replicate_pool,
     shares,
     uniform_pool_workload,

@@ -34,6 +34,17 @@ class SimResult:
 
     preemptions: int = 0
 
+    # --- delivered accuracy (the model-variant axis) ---------------------
+    # ``accuracy_weighted`` accumulates answered-requests x the accuracy
+    # of the variant that answered them; ``accuracy_served`` is the
+    # matching answered mass, so weighted / served is the delivered mean.
+    # Runs through a variant-blind path (the reference loop) never post
+    # these, and ``summary()`` omits the derived keys in that case.
+    accuracy_weighted: float = 0.0
+    accuracy_served: float = 0.0
+    acc_violations: float = 0.0          # answered below the accuracy floor
+    variant_swaps: int = 0               # completed runtime variant swaps
+
     @property
     def cost_total(self) -> float:
         return (self.cost_reserved + self.cost_spot + self.cost_burst
@@ -44,12 +55,21 @@ class SimResult:
         return self.violations / max(self.total_requests, 1e-9)
 
     @property
+    def mean_accuracy(self) -> float:
+        """Delivered accuracy over every answered request."""
+        return self.accuracy_weighted / max(self.accuracy_served, 1e-9)
+
+    @property
+    def acc_violation_rate(self) -> float:
+        return self.acc_violations / max(self.accuracy_served, 1e-9)
+
+    @property
     def overprovision_ratio(self) -> float:
         """Idle-capacity chip-seconds as a fraction of needed chip-seconds."""
         return self.chip_seconds_over / max(self.chip_seconds_needed, 1e-9)
 
     def summary(self) -> dict:
-        return {
+        s = {
             "cost_total": round(self.cost_total, 4),
             "cost_reserved": round(self.cost_reserved, 4),
             "cost_spot": round(self.cost_spot, 4),
@@ -62,6 +82,11 @@ class SimResult:
             "overprovision_ratio": round(self.overprovision_ratio, 4),
             "chip_seconds": round(self.chip_seconds, 1),
         }
+        if self.accuracy_served > 0:   # variant-aware run: report accuracy
+            s["mean_accuracy"] = round(self.mean_accuracy, 5)
+            s["acc_violation_rate"] = round(self.acc_violation_rate, 5)
+            s["variant_swaps"] = self.variant_swaps
+        return s
 
 
 class Ledger:
@@ -98,6 +123,18 @@ class Ledger:
 
     def add_preemptions(self, n: int) -> None:
         self.res.preemptions += n
+
+    # -- the model-variant axis ----------------------------------------------
+    def add_accuracy(self, weighted: float, served: float) -> None:
+        """Post one tick's answered mass and its accuracy-weighted sum."""
+        self.res.accuracy_weighted += weighted
+        self.res.accuracy_served += served
+
+    def add_acc_violations(self, n: float) -> None:
+        self.res.acc_violations += n
+
+    def add_variant_swaps(self, n: int) -> None:
+        self.res.variant_swaps += n
 
     def add_capacity(
         self,

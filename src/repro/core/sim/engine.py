@@ -40,7 +40,7 @@ from repro.core.hardware import PRICING, FleetPricing
 from repro.core.load_monitor import LoadMonitor, PoolLoadMonitor
 from repro.core.profiles import ModelProfile, get_profile
 from repro.core.sim.accounting import Ledger, SimResult
-from repro.core.sim.fleet import BurstTier, ResourceTier, SpotTier
+from repro.core.sim.fleet import BurstTier, ResourceTier, SpotTier, SwapPipeline
 from repro.core.sim.queues import QueueArray
 from repro.core.sim.types import (
     OFFLOAD_MODES,
@@ -52,6 +52,7 @@ from repro.core.sim.types import (
     Policy,
     PoolAction,
     PoolObs,
+    VariantCatalog,
     shares,
 )
 
@@ -146,7 +147,7 @@ class ArchView:
 
     @property
     def throughput(self) -> float:
-        return float(self._sim.throughput[self._i])
+        return float(self._sim.eff_throughput[self._i])
 
     @property
     def n_active(self) -> int:
@@ -183,6 +184,7 @@ class ServingSim:
         prewarm: bool = True,
         warm_start: bool = True,
         seed: int = 0,
+        catalog: Optional[VariantCatalog] = None,
     ):
         arr = np.asarray(trace, dtype=np.float64)
         self.pricing = pricing
@@ -214,6 +216,33 @@ class ServingSim:
         lat_b1 = np.array([p.request_latency(STRICT, 1) for p in profs])
         self.lat_b1 = lat_b1
 
+        # model-variant axis: each arch serves its *active* variant's
+        # service rate / chip footprint / accuracy; without a catalog the
+        # arch is its own sole variant (multipliers 1.0 — bit-identical
+        # to the variant-blind engine).  Queue slack and burst latency
+        # stay pinned to the base variant's batch-1 latency: they encode
+        # the stream's SLO geometry, not the deployed weights.
+        self.acc_floor = np.array([w.min_accuracy for w in workload])
+        if catalog is None:
+            self.var_acc = np.array([[p.cfg.quality] for p in profs])
+            self.var_smult = np.ones((n, 1))
+            self.var_cmult = np.ones((n, 1))
+            self.var_n = np.ones(n, dtype=np.int64)
+            base_idx = np.zeros(n, dtype=np.int64)
+            self.var_lo = np.zeros(n, dtype=np.int64)
+            self.var_cheapest = np.zeros(n, dtype=np.int64)
+        else:
+            va = catalog.as_arrays(workload)
+            self.var_acc = va["accuracy"]
+            self.var_smult = va["service_mult"]
+            self.var_cmult = va["cost_mult"]
+            self.var_n = va["n_variants"]
+            base_idx = va["base_idx"]
+            self.var_lo = va["floor_lo"]
+            self.var_cheapest = va["floor_cheapest"]
+        self.catalog = catalog
+        self.swap = SwapPipeline(base_idx, pricing.variant_swap_s)
+
         # class queues: slack = SLO minus the batch-1 model latency
         slack_strict = np.maximum(0, (STRICT.slo_s - lat_b1).astype(np.int64))
         slack_relaxed = np.maximum(0, (RELAXED.slo_s - lat_b1).astype(np.int64))
@@ -233,6 +262,36 @@ class ServingSim:
             ) * pricing.burst_chip_s + pricing.burst_invocation_fee,
             prewarm=prewarm,
         )
+
+        # effective (active-variant) serving state; with every arch on its
+        # base variant this is exactly the base state (multipliers 1.0)
+        self._refresh_variant_state()
+        # single-variant world: the variant observation never changes, so
+        # one read-only record serves every tick (keeps the seed fast
+        # path free of per-tick copies/gathers for the new fields)
+        self._variants_live = self.var_smult.shape[1] > 1
+        if not self._variants_live:
+            ones = np.ones(n)
+            statics = {
+                "active_variant": self.swap.current,
+                "n_variants": self.var_n,
+                "accuracy": self.cur_acc,
+                "accuracy_floor": self.acc_floor,
+                "variant_lo": self.var_lo,
+                "variant_cheapest": self.var_cheapest,
+                "variant_in_flight": np.zeros(n, dtype=bool),
+                "variant_up_ratio": ones,
+                "variant_down_ratio": ones,
+                "variant_pending_ratio": ones,
+            }
+            for a in statics.values():
+                a.setflags(write=False)
+            self._static_variant_obs = statics
+        # floor-free streams cannot violate the accuracy SLO — skip the
+        # per-tick comparison and share one read-only zero marginal
+        self._acc_floor_live = bool((self.acc_floor > 0).any())
+        self._zero_arch = np.zeros(n)
+        self._zero_arch.setflags(write=False)
 
         self.ledger = Ledger()
         self.last_util = np.zeros(n)
@@ -270,6 +329,10 @@ class ServingSim:
         # pool-wide controller decomposes its reward from
         self.cost_arch = np.zeros(n)
         self.last_viol_arch = np.zeros(n)
+        # delivered-accuracy accounting: answered mass x active-variant
+        # accuracy, and the mass answered below each stream's floor
+        self.acc_weight_arch = np.zeros(n)
+        self.acc_viol_arch = np.zeros(n)
 
         self.states: Dict[str, ArchView] = {
             k: ArchView(self, i, w, p)
@@ -282,8 +345,28 @@ class ServingSim:
         )
         if warm_start:
             self.reserved.active = np.maximum(
-                1, np.ceil(t0_rates / self.throughput)
+                1, np.ceil(t0_rates / self.eff_throughput)
             ).astype(np.int64)
+
+    # ------------------------------------------------------------------
+    def _refresh_variant_state(self) -> None:
+        """Re-gather the active variant's effective serving vectors.
+
+        Called at init and whenever a swap completes (rare), so the hot
+        loop reads plain ``[A]`` vectors.  On base variants every gather
+        returns multiplier 1.0 and the products are bit-identical to the
+        variant-blind quantities (``x * 1.0 == x`` in IEEE-754).
+        """
+        cur = self.swap.current[:, None]
+        self.cur_acc = np.take_along_axis(self.var_acc, cur, 1)[:, 0]
+        smult = np.take_along_axis(self.var_smult, cur, 1)[:, 0]
+        cmult = np.take_along_axis(self.var_cmult, cur, 1)[:, 0]
+        self.cur_smult = smult
+        self.eff_throughput = self.throughput * smult
+        self.eff_chips = self.chips * cmult
+        self.burst.cost_per_request = (
+            self.eff_chips / self.eff_throughput
+        ) * self.pricing.burst_chip_s + self.pricing.burst_invocation_fee
 
     # ------------------------------------------------------------------
     @property
@@ -334,6 +417,42 @@ class ServingSim:
         self._rates = rates
         self.arrived_arch += rates
 
+        # variant observation: neighbor / in-flight service-rate ratios
+        # are what swap-aware policies need to judge (and pre-provision
+        # for) a move; in the single-variant world the whole record is
+        # the precomputed read-only constant
+        if not self._variants_live:
+            vobs = self._static_variant_obs
+        else:
+            cur = self.swap.current
+            up = np.minimum(cur + 1, self.var_n - 1)[:, None]
+            dn = np.maximum(cur - 1, 0)[:, None]
+            pend = self.swap.pending
+            vobs = {
+                "active_variant": cur.copy(),
+                "n_variants": self.var_n.copy(),
+                "accuracy": self.cur_acc.copy(),
+                "accuracy_floor": self.acc_floor.copy(),
+                "variant_lo": self.var_lo.copy(),
+                "variant_cheapest": self.var_cheapest.copy(),
+                "variant_in_flight": self.swap.in_flight.copy(),
+                "variant_up_ratio": (
+                    np.take_along_axis(self.var_smult, up, 1)[:, 0]
+                    / self.cur_smult
+                ),
+                "variant_down_ratio": (
+                    np.take_along_axis(self.var_smult, dn, 1)[:, 0]
+                    / self.cur_smult
+                ),
+                "variant_pending_ratio": np.where(
+                    pend >= 0,
+                    np.take_along_axis(
+                        self.var_smult, np.maximum(pend, 0)[:, None], 1
+                    )[:, 0] / self.cur_smult,
+                    1.0,
+                ),
+            }
+
         self._pool_obs = PoolObs(
             keys=self.keys,
             rate=rates,
@@ -344,11 +463,12 @@ class ServingSim:
             n_active=self.reserved.active.copy(),
             n_pending=self.reserved.pending_total.copy(),
             n_spot=self.spot.active.copy(),
-            throughput=self.throughput.copy(),
+            throughput=self.eff_throughput.copy(),
             utilization=self.last_util.copy(),
             queue_strict=self.q_strict.totals().copy(),
             queue_relaxed=self.q_relaxed.totals().copy(),
             last_violations=self.last_viol_arch.copy(),
+            **vobs,
         )
         return self._pool_obs
 
@@ -368,6 +488,16 @@ class ServingSim:
                 n_spot=int(p.n_spot[i]),
                 throughput=float(p.throughput[i]),
                 utilization=float(p.utilization[i]),
+                active_variant=int(p.active_variant[i]),
+                n_variants=int(p.n_variants[i]),
+                accuracy=float(p.accuracy[i]),
+                accuracy_floor=float(p.accuracy_floor[i]),
+                variant_lo=int(p.variant_lo[i]),
+                variant_cheapest=int(p.variant_cheapest[i]),
+                variant_in_flight=bool(p.variant_in_flight[i]),
+                variant_up_ratio=float(p.variant_up_ratio[i]),
+                variant_down_ratio=float(p.variant_down_ratio[i]),
+                variant_pending_ratio=float(p.variant_pending_ratio[i]),
             )
             for i, k in enumerate(self.keys)
         }
@@ -383,6 +513,7 @@ class ServingSim:
         target = np.empty(n, dtype=np.int64)
         offload = np.zeros(n, dtype=np.int64)
         spot_target = np.zeros(n, dtype=np.int64)
+        variant_target = np.full(n, -1, dtype=np.int64)
         for i, k in enumerate(self.keys):
             act = actions.get(k)
             if act is None:
@@ -392,7 +523,8 @@ class ServingSim:
                 # unknown offload values mean "none", as in the seed loop
                 offload[i] = _OFFLOAD_CODE.get(act.offload, 0)
                 spot_target[i] = act.spot_target
-        return self._step(target, offload, spot_target)
+                variant_target[i] = act.variant
+        return self._step(target, offload, spot_target, variant_target)
 
     def apply_pool(self, action: PoolAction) -> dict:
         """Vectorized counterpart of :meth:`apply`."""
@@ -401,6 +533,7 @@ class ServingSim:
             np.asarray(action.target, dtype=np.int64),
             action.offload_codes(n),
             action.spot_targets(n),
+            action.variant_targets(n),
         )
 
     def _step(
@@ -408,6 +541,7 @@ class ServingSim:
         target: np.ndarray,
         offload: np.ndarray,
         spot_target: np.ndarray,
+        variant_target: Optional[np.ndarray] = None,
     ) -> dict:
         assert self._pool_obs is not None, "call observe() before apply()"
         tick = self.tick
@@ -416,6 +550,21 @@ class ServingSim:
         cost0, viol0 = res.cost_total, res.violations
         cost0_arch = self.cost_arch.copy()
         viol0_arch = self.violations_arch.copy()
+
+        # variant swaps: due swaps take effect for THIS tick's serving
+        # (like provisioning: ready launches join before the queues are
+        # served), then new requests enter the pipeline — the arch keeps
+        # serving at the old variant's rate until theirs completes
+        # (single-variant world: every request is a held/cancelled no-op)
+        if self._variants_live:
+            done_swaps = self.swap.pop_ready(tick)
+            if done_swaps.any():
+                led.add_variant_swaps(int(done_swaps.sum()))
+                self._refresh_variant_state()
+            if variant_target is not None and (variant_target >= 0).any():
+                self.swap.request(
+                    tick, np.minimum(variant_target, self.var_n - 1)
+                )
 
         # provision: each tier runs its events + pipeline toward its target
         self.reserved.begin_tick(tick, self.rng, led)
@@ -427,11 +576,14 @@ class ServingSim:
                 self.spot.active.any() or self.spot.pipeline.total.any()
             )
 
-        # serve from the class queues, strict first, oldest first
-        capacity = (self.reserved.active + self.spot.active) * self.throughput
+        # serve from the class queues, strict first, oldest first, at the
+        # ACTIVE variant's service rate (old variant while a swap is in
+        # flight — the weight reload has not landed yet)
+        capacity = (self.reserved.active + self.spot.active) * self.eff_throughput
         served_s, late_s = self.q_strict.serve(tick, capacity)
         served_r, late_r = self.q_relaxed.serve(tick, capacity - served_s)
         served = served_s + served_r
+        answered = served.copy()       # accuracy accounting: who answered
         led.add_served_vm(float(served.sum()))
         led.add_violations(float(late_s.sum() + late_r.sum()), float(late_s.sum()))
         self.served_vm_arch += served
@@ -462,6 +614,7 @@ class ServingSim:
                         tick, counts, q.slo_s, strict, led
                     )
                     self.served_burst_arch += counts
+                    answered += counts
                     self.violations_arch += burst_viol
                     self.cost_arch += self.burst.cost_per_request * counts
 
@@ -476,15 +629,32 @@ class ServingSim:
                 led.add_served_vm(dropped)   # still answered, just very late
                 self.dropped_arch += dropped_a
                 self.violations_arch += dropped_a
+                answered += dropped_a
 
-        # accounting (cost attributed per arch as each tier posts)
-        chip_s = self.reserved.account(led, self.chips)
+        # delivered accuracy: every answered request carries the active
+        # variant's accuracy; mass answered below the stream's floor is
+        # an accuracy-SLO violation (conserved: the per-arch weights sum
+        # to the ledger totals, tick by tick)
+        acc_w = answered * self.cur_acc
+        self.acc_weight_arch += acc_w
+        led.add_accuracy(float(acc_w.sum()), float(answered.sum()))
+        if self._acc_floor_live:
+            acc_viol = answered * (self.cur_acc < self.acc_floor - 1e-12)
+            if acc_viol.any():
+                self.acc_viol_arch += acc_viol
+                led.add_acc_violations(float(acc_viol.sum()))
+        else:
+            acc_viol = self._zero_arch
+
+        # accounting (cost attributed per arch as each tier posts, at the
+        # active variant's chip footprint)
+        chip_s = self.reserved.account(led, self.eff_chips)
         self.cost_arch += chip_s * self.reserved.price_per_chip_s()
         if self._spot_live:
-            spot_chip_s = self.spot.account(led, self.chips)
+            spot_chip_s = self.spot.account(led, self.eff_chips)
             self.cost_arch += spot_chip_s * self.spot.price_per_chip_s()
             chip_s = chip_s + spot_chip_s
-        led.add_capacity(chip_s, self._rates, self.throughput, self.chips)
+        led.add_capacity(chip_s, self._rates, self.eff_throughput, self.eff_chips)
 
         self.tick += 1
         if self.done:
@@ -495,6 +665,10 @@ class ServingSim:
             "violations": res.violations - viol0,
             "cost_arch": self.cost_arch - cost0_arch,
             "violations_arch": self.last_viol_arch.copy(),
+            "accuracy": float(acc_w.sum()),
+            "accuracy_arch": acc_w,
+            "acc_violations": float(acc_viol.sum()),
+            "acc_violations_arch": acc_viol,
         }
 
     def _finalize(self) -> None:
@@ -523,6 +697,10 @@ class ServingSim:
             "expired_end": self.expired_end_arch.copy(),
             "violations": self.violations_arch.copy(),
             "queued": self.q_strict.totals() + self.q_relaxed.totals(),
+            # the accuracy axis (answered == served_vm + served_burst +
+            # dropped; acc_weight / answered is delivered accuracy)
+            "acc_weight": self.acc_weight_arch.copy(),
+            "acc_violations": self.acc_viol_arch.copy(),
         }
 
     # ------------------------------------------------------------------
@@ -547,6 +725,7 @@ def simulate(
     prewarm: bool = True,
     warm_start: bool = True,                 # fleet starts sized for t=0 load
     record_timeline: bool = False,
+    catalog: Optional[VariantCatalog] = None,
 ) -> SimResult:
     """Closed-loop run: the policy drives :class:`ServingSim` over the trace.
 
@@ -554,10 +733,13 @@ def simulate(
     per-arch arrival matrix from :mod:`repro.core.workloads` (e.g.
     ``Scenario.build(len(workload))``).  Policies with a truthy
     ``vectorized`` attribute get the SoA interface (``PoolObs ->
-    PoolAction``); everything else gets the dict interface.
+    PoolAction``); everything else gets the dict interface.  ``catalog``
+    opens the model-variant axis (runtime swaps via
+    ``PoolAction.variant_target`` / ``Action.variant``).
     """
     sim = ServingSim(
-        trace, workload, pricing=pricing, prewarm=prewarm, warm_start=warm_start
+        trace, workload, pricing=pricing, prewarm=prewarm,
+        warm_start=warm_start, catalog=catalog,
     )
     vectorized = bool(getattr(policy, "vectorized", False))
     while not sim.done:

@@ -64,6 +64,58 @@ class ProvisionPipeline:
 
 
 # ---------------------------------------------------------------------------
+# Model-variant swap pipeline (INFaaS-style runtime variant switching).
+# ---------------------------------------------------------------------------
+class SwapPipeline:
+    """Variant swaps in flight, vectorized over the pool.
+
+    A swap requested at tick ``t`` becomes effective at ``t + lat``; the
+    arch keeps serving (and billing) at the **old** variant until then —
+    the weight reload occupies the held slices, like a provisioning
+    pipeline occupies the lead time.  At most one swap per arch is in
+    flight; semantics mirror provisioning's cancel-newest-first:
+
+    * a request for a *different* target replaces the in-flight swap and
+      restarts the clock (the newest decision wins, the not-yet-ready
+      one is cancelled);
+    * re-requesting the in-flight target leaves its clock alone;
+    * re-requesting the *current* variant cancels the in-flight swap
+      outright (nothing ever becomes ready).
+    """
+
+    def __init__(self, current: np.ndarray, latency_s: float):
+        self.lat = max(int(latency_s), 1)
+        self.current = np.asarray(current, dtype=np.int64).copy()
+        n = len(self.current)
+        self.pending = np.full(n, -1, dtype=np.int64)
+        self.ready_at = np.zeros(n, dtype=np.int64)
+        self.completed = 0                     # lifetime swap count
+
+    @property
+    def in_flight(self) -> np.ndarray:
+        return self.pending >= 0
+
+    def pop_ready(self, tick: int) -> np.ndarray:
+        """Complete due swaps; returns the boolean completion mask."""
+        done = (self.pending >= 0) & (self.ready_at <= tick)
+        if done.any():
+            self.current[done] = self.pending[done]
+            self.pending[done] = -1
+            self.completed += int(done.sum())
+        return done
+
+    def request(self, tick: int, target: np.ndarray) -> None:
+        """Apply per-arch swap requests (``target[a] = -1`` means hold)."""
+        t = np.asarray(target, dtype=np.int64)
+        cancel = (t >= 0) & (t == self.current)
+        self.pending[cancel] = -1
+        start = (t >= 0) & (t != self.current) & (t != self.pending)
+        if start.any():
+            self.pending[start] = t[start]
+            self.ready_at[start] = tick + self.lat
+
+
+# ---------------------------------------------------------------------------
 # Tier base: reserved (on-demand) slices.
 # ---------------------------------------------------------------------------
 class ResourceTier:

@@ -27,6 +27,8 @@ from repro.core.workloads.generators import (  # noqa: F401
     hotswap,
     mmpp,
     pool_trace,
+    replay,
+    save_replay,
 )
 from repro.core.workloads.scenario import (  # noqa: F401
     SCENARIO_ZOO,

@@ -206,10 +206,65 @@ def pool_trace(n_archs: int, duration_s: int, mean_rps: float, seed: int, *,
     return from_pool_trace(tr, share)
 
 
+# ---------------------------------------------------------------------------
+# Trace replay: a captured [A, T] matrix as a first-class scenario.
+# ---------------------------------------------------------------------------
+REPLAY_KEY = "arrivals"
+
+
+def save_replay(path: str, arrivals: np.ndarray, *,
+                key: str = REPLAY_KEY) -> str:
+    """Capture an ``[A, T]`` arrival matrix for later replay.
+
+    Writes a compressed ``.npz`` the ``replay`` generator (and therefore
+    ``Scenario(kind="replay", params={"path": ...})``) loads back —
+    the spec stays a small JSON-serializable record while the matrix
+    itself lives on disk.  Returns the path actually written
+    (``np.savez`` appends ``.npz`` when missing, so the returned path —
+    not necessarily the argument — is what a replay spec must carry)."""
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    assert arrivals.ndim == 2, "replay captures [A, T] matrices"
+    if not path.endswith(".npz"):
+        path += ".npz"
+    np.savez_compressed(path, **{key: arrivals})
+    return path
+
+
+def replay(n_archs: int, duration_s: int, mean_rps: float, seed: int, *,
+           path: str, key: str = REPLAY_KEY,
+           renormalize: bool = False) -> np.ndarray:
+    """Replay a captured ``[A, T]`` arrival matrix from an ``.npz`` file.
+
+    The matrix must have exactly ``n_archs`` rows and at least
+    ``duration_s`` columns (longer captures are truncated — replay never
+    invents data).  ``seed`` is ignored: a replay is literal, and
+    re-rolling an episode (the RL env does per reset) replays the same
+    capture.  With ``renormalize=True`` the matrix is rescaled so the
+    pool mean is ``mean_rps`` (cost-comparable against generated
+    scenarios); by default the captured rates are served verbatim.
+    """
+    with np.load(path) as z:
+        assert key in z, f"{path!r} has no array {key!r} (has {sorted(z)})"
+        mat = np.asarray(z[key], dtype=np.float64)
+    assert mat.ndim == 2, f"replay needs an [A, T] matrix, got {mat.shape}"
+    assert mat.shape[0] == n_archs, (
+        f"capture has {mat.shape[0]} rows for a {n_archs}-arch pool"
+    )
+    assert mat.shape[1] >= duration_s, (
+        f"capture holds {mat.shape[1]} ticks < duration_s={duration_s}"
+    )
+    out = mat[:, :duration_s].copy()
+    if renormalize:
+        pool_mean = max(float(out.sum(axis=0).mean()), 1e-12)
+        out *= mean_rps / pool_mean
+    return out
+
+
 GENERATORS: Dict[str, object] = {
     "pool_trace": pool_trace,
     "diurnal": diurnal,
     "flash_crowd": flash_crowd,
     "mmpp": mmpp,
     "hotswap": hotswap,
+    "replay": replay,
 }

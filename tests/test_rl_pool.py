@@ -38,7 +38,15 @@ def pool_env():
 # ---------------------------------------------------------------------------
 def test_single_arch_wrapper_reproduces_prerefactor_episode():
     """Golden values recorded from the dict-interface ServingEnv at the
-    PR 2 tree (cyclic action sequence over a fixed twitter trace)."""
+    PR 2 tree (cyclic action sequence over a fixed twitter trace).
+
+    The variant axis (PR 4) appended two observation features (variant
+    position = 0.0 on the default single-variant catalog, accuracy
+    headroom = the arch's quality over a 0.0 floor) and tripled
+    N_ACTIONS with a hold-first variant head — ``(t % N_ACTIONS) %
+    N_PROCURE == t % N_PROCURE``, so the cyclic action stream decodes to
+    the same procurement decisions and every episode total is unchanged.
+    """
     trace = get_trace("twitter", 300, mean_rps=40)
     env = ServingEnv(EnvConfig(arch="qwen1.5-0.5b", mean_rps=40), trace)
     obs = env.reset()
@@ -46,7 +54,8 @@ def test_single_arch_wrapper_reproduces_prerefactor_episode():
         obs,
         [0.1769973784685135, 0.1769973784685135, 0.20000000298023224,
          0.04424934461712837, 0.13274803757667542, 0.10000000149011612,
-         0.0, 0.0, 0.0, 0.0],
+         0.0, 0.0, 0.0, 0.0,
+         0.0, 0.3930000066757202],
         rtol=0, atol=1e-12,
     )
     total, done, t = 0.0, False, 0

@@ -1,0 +1,423 @@
+"""The model-variant axis: VariantCatalog construction + the shared
+candidate filter, SwapPipeline latency semantics, engine accuracy/flow
+conservation with swaps in flight, hold-is-bit-identical, parity of the
+variant-aware vectorized schedulers against their dict forms, and the
+RL variant head."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.model_selection import Constraint, feasible_set, select_paragon
+from repro.core.profiles import model_pool
+from repro.core.schedulers import SCHEDULERS, VECTOR_SCHEDULERS
+from repro.core.sim import (
+    STRICT,
+    Action,
+    PoolAction,
+    ServingSim,
+    SwapPipeline,
+    Variant,
+    VariantCatalog,
+    filter_pool_candidates,
+    simulate,
+    uniform_pool_workload,
+)
+from repro.core.workloads import get_scenario
+
+POOL = ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b"]
+FLOOR = 0.5
+
+
+def _workload(floor=FLOOR, pool=POOL):
+    wl = uniform_pool_workload(pool, strict_frac=0.25)
+    return [dataclasses.replace(w, min_accuracy=floor) for w in wl]
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return VariantCatalog.for_workload(_workload())
+
+
+# ---------------------------------------------------------------------------
+# Catalog construction + the shared candidate filter (dedup with the
+# offline selector).
+# ---------------------------------------------------------------------------
+def test_catalog_ordered_and_base_is_identity(catalog):
+    for arch in POOL:
+        vs = catalog.variants(arch)
+        accs = [v.accuracy for v in vs]
+        assert accs == sorted(accs)
+        b = catalog.base_idx[arch]
+        assert vs[b].arch == arch
+        assert vs[b].service_mult == 1.0 and vs[b].cost_mult == 1.0
+        # default candidates = the workload's archs (the deployable pool)
+        assert {v.arch for v in vs} <= set(POOL)
+
+
+def test_catalog_floor_indices(catalog):
+    pool = model_pool(STRICT)
+    for arch in POOL:
+        vs = catalog.variants(arch)
+        lo, cheapest = catalog.floor_indices(arch, FLOOR)
+        assert vs[lo].accuracy >= FLOOR
+        assert lo == min(i for i, v in enumerate(vs) if v.accuracy >= FLOOR)
+        ok = [i for i, v in enumerate(vs) if v.accuracy >= FLOOR]
+        assert cheapest == min(ok, key=lambda i: vs[i].cost_per_1k)
+        # the Fig-2 numbers are the single source of truth
+        assert vs[cheapest].cost_per_1k == pool[vs[cheapest].arch]["cost_per_1k"]
+    # impossible floor falls back to the most accurate variant
+    lo, cheapest = catalog.floor_indices(POOL[0], 2.0)
+    assert lo == cheapest == catalog.n_variants(POOL[0]) - 1
+
+
+def test_selector_and_catalog_share_the_filter():
+    """The offline selector's feasible set and the catalog's variant set
+    come from the same predicate: Paragon's least-cost pick for a
+    constraint equals the catalog's cheapest floor-satisfying variant."""
+    c = Constraint(min_accuracy=FLOOR, max_latency_s=STRICT.slo_s)
+    fs = feasible_set(c, STRICT)
+    assert fs == filter_pool_candidates(
+        model_pool(STRICT), min_accuracy=FLOOR, max_latency_s=STRICT.slo_s
+    )
+    ct = VariantCatalog.from_pool(model_pool(STRICT))   # full-pool candidates
+    arch = "llama3-8b"
+    _, cheapest = ct.floor_indices(arch, FLOOR)
+    assert ct.variants(arch)[cheapest].arch == select_paragon(c, STRICT)
+
+
+# ---------------------------------------------------------------------------
+# SwapPipeline latency semantics.
+# ---------------------------------------------------------------------------
+def test_swap_pipeline_fixed_latency():
+    sp = SwapPipeline(np.array([0, 2]), latency_s=3.0)
+    sp.request(0, np.array([1, -1]))              # arch 0: 0 -> 1 at tick 3
+    np.testing.assert_array_equal(sp.current, [0, 2])   # old until ready
+    assert not sp.pop_ready(1).any()
+    assert not sp.pop_ready(2).any()
+    done = sp.pop_ready(3)
+    np.testing.assert_array_equal(done, [True, False])
+    np.testing.assert_array_equal(sp.current, [1, 2])
+    assert sp.completed == 1
+    assert not sp.in_flight.any()
+
+
+def test_swap_pipeline_cancel_newest_first():
+    sp = SwapPipeline(np.array([0]), latency_s=5.0)
+    sp.request(0, np.array([2]))                  # ready at 5
+    sp.request(2, np.array([3]))                  # replaces: ready at 7
+    assert not sp.pop_ready(5).any()              # the tick-0 swap was
+    assert sp.in_flight.all()                     # cancelled, not landed
+    assert sp.pop_ready(7).all()
+    assert sp.current[0] == 3
+    # re-requesting the in-flight target must NOT restart the clock
+    sp.request(8, np.array([1]))
+    sp.request(10, np.array([1]))
+    assert sp.pop_ready(13).all()                 # 8 + 5, not 10 + 5
+    # re-requesting the current variant cancels outright
+    sp.request(14, np.array([0]))
+    sp.request(15, np.array([1]))
+    assert not sp.in_flight.any()
+    assert not sp.pop_ready(30).any()
+    assert sp.current[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# Engine: hold is bit-identical; serving rate follows the swap latency.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["reactive", "paragon", "mixed"])
+def test_hold_bit_identical_to_no_catalog(policy, catalog):
+    """With every variant_target held, a catalog-enabled run must equal
+    the catalog-free run on every summary key (money, violations, AND
+    accuracy — the base variant is the arch itself)."""
+    arr = get_scenario("flash_anti").build(len(POOL), duration_s=300,
+                                           mean_rps=80)
+    wl = _workload(floor=0.0)
+    a = simulate(arr, wl, VECTOR_SCHEDULERS[policy]()).summary()
+    b = simulate(arr, wl, VECTOR_SCHEDULERS[policy](), catalog=catalog).summary()
+    assert a == b
+
+
+def test_variant_aware_policies_hold_on_degenerate_catalog():
+    """On the default single-variant world the two variant-aware
+    schedulers degrade to exactly Paragon."""
+    arr = get_scenario("mmpp_bursts").build(len(POOL), duration_s=240,
+                                            mean_rps=60)
+    wl = _workload(floor=0.0)
+    p = simulate(arr, wl, VECTOR_SCHEDULERS["paragon"]()).summary()
+    for name in ("infaas_variant", "accuracy_floor"):
+        assert simulate(arr, wl, VECTOR_SCHEDULERS[name]()).summary() == p
+
+
+def test_swap_serves_at_old_rate_until_latency_elapses(catalog):
+    """A requested swap changes PoolObs.throughput/active_variant only
+    after pricing.variant_swap_s ticks; cost follows the old footprint
+    meanwhile."""
+    wl = _workload()
+    arr = np.full((len(POOL), 240), 10.0)
+    sim = ServingSim(arr, wl, catalog=catalog)
+    lat = sim.pricing.variant_swap_s
+    base = sim.swap.current.copy()
+    target = np.where(base + 1 < sim.var_n, base + 1, base - 1).astype(np.int64)
+    obs0 = sim.observe_pool()
+    thr0 = obs0.throughput.copy()
+    sim.apply_pool(PoolAction(
+        target=np.ones(len(POOL), dtype=np.int64),
+        variant_target=target,
+    ))
+    hold = PoolAction(target=np.ones(len(POOL), dtype=np.int64))
+    # the swap lands inside the _step of tick (request + lat): every
+    # observation up to and including that tick still shows the OLD
+    # variant and rate — the reload has not finished when serving starts
+    for _ in range(int(lat)):
+        obs = sim.observe_pool()
+        np.testing.assert_array_equal(obs.active_variant, base)
+        np.testing.assert_array_equal(obs.throughput, thr0)   # old rate
+        assert obs.variant_in_flight.all()
+        sim.apply_pool(hold)
+    obs = sim.observe_pool()                       # swap landed
+    np.testing.assert_array_equal(obs.active_variant, target)
+    assert (obs.throughput != thr0).any()
+    assert not obs.variant_in_flight.any()
+    assert sim.res.variant_swaps == len(POOL)
+
+
+# ---------------------------------------------------------------------------
+# Accuracy + flow conservation with swaps in flight.
+# ---------------------------------------------------------------------------
+def test_accuracy_and_flow_conservation_under_random_swaps(catalog):
+    """Per tick: the accuracy marginal equals answered x the active
+    variant's accuracy per arch, sums match the ledger, and the per-arch
+    flow identity holds throughout a run with random swaps in flight."""
+    wl = _workload()
+    arr = get_scenario("mmpp_bursts").build(len(POOL), duration_s=300,
+                                            mean_rps=80, seed=7)
+    sim = ServingSim(arr, wl, catalog=catalog)
+    rng = np.random.default_rng(0)
+    n = len(POOL)
+    prev = {k: v.copy() for k, v in sim.per_arch_counts().items()}
+    while not sim.done:
+        sim.observe_pool()
+        m = sim.apply_pool(PoolAction(
+            target=rng.integers(1, 5, size=n),
+            offload=rng.integers(0, 3, size=n),
+            variant_target=rng.integers(-1, sim.var_n, size=n),
+        ))
+        counts = sim.per_arch_counts()
+        answered_d = (
+            counts["served_vm"] - prev["served_vm"]
+            + counts["served_burst"] - prev["served_burst"]
+            + counts["dropped"] - prev["dropped"]
+        )
+        # the tick's accuracy marginal is answered x active accuracy
+        np.testing.assert_allclose(
+            m["accuracy_arch"], answered_d * sim.cur_acc, atol=1e-9
+        )
+        assert m["accuracy"] == pytest.approx(float(m["accuracy_arch"].sum()))
+        assert m["acc_violations"] == pytest.approx(
+            float(m["acc_violations_arch"].sum())
+        )
+        # flow conservation per arch, every tick, swaps in flight or not
+        accounted = (
+            counts["served_vm"] + counts["served_burst"] + counts["dropped"]
+            + counts["expired_end"] + counts["queued"]
+        )
+        np.testing.assert_allclose(counts["arrived"], accounted, atol=1e-6)
+        prev = {k: v.copy() for k, v in counts.items()}
+    res = sim.res
+    counts = sim.per_arch_counts()
+    # cumulative per-arch weights sum to the ledger totals
+    assert float(counts["acc_weight"].sum()) == pytest.approx(
+        res.accuracy_weighted
+    )
+    assert float(counts["acc_violations"].sum()) == pytest.approx(
+        res.acc_violations
+    )
+    answered = counts["served_vm"] + counts["served_burst"] + counts["dropped"]
+    assert res.accuracy_served == pytest.approx(float(answered.sum()))
+    # delivered accuracy is a convex combination of catalog accuracies
+    assert sim.var_acc.min() - 1e-9 <= res.mean_accuracy <= sim.var_acc.max() + 1e-9
+
+
+def test_accuracy_floor_violations_counted():
+    """An impossible floor books every answered request as an accuracy
+    violation; a trivially met floor books none."""
+    arr = np.full((len(POOL), 60), 5.0)
+    hi = simulate(arr, _workload(floor=0.99), SCHEDULERS["paragon"]())
+    assert hi.acc_violations == pytest.approx(hi.accuracy_served)
+    lo = simulate(arr, _workload(floor=0.0), SCHEDULERS["paragon"]())
+    assert lo.acc_violations == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Dict/vector parity of the variant-aware schedulers on a live catalog.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["infaas_variant", "accuracy_floor"])
+def test_variant_scheduler_dict_vector_parity(policy, catalog):
+    wl = _workload()
+    arr = get_scenario("flash_correlated").build(len(POOL), duration_s=400,
+                                                 mean_rps=120)
+    d = simulate(arr, wl, SCHEDULERS[policy](), catalog=catalog).summary()
+    v = simulate(arr, wl, VECTOR_SCHEDULERS[policy](), catalog=catalog).summary()
+    assert d == v
+    assert d["variant_swaps"] > 0       # the parity run actually swapped
+
+
+def test_accuracy_floor_meets_floor_and_undercuts_reactive():
+    """The bench claim at test scale: cheapest-meeting-floor variants
+    beat the fixed-variant reactive baseline on cost at better delivered
+    accuracy, with fewer accuracy violations.  Needs the 8-arch serving
+    pool — dominance comes from its dominated members (e.g. the cheap
+    accurate MoE undercutting llama; recurrentgemma undercutting
+    minicpm), which the 4-arch seed pool lacks."""
+    pool8 = POOL + ["whisper-small", "llava-next-mistral-7b",
+                    "recurrentgemma-9b", "phi3.5-moe-42b-a6.6b"]
+    wl = _workload(floor=0.55, pool=pool8)
+    ct = VariantCatalog.for_workload(wl)
+    arr = get_scenario("flash_anti").build(len(pool8), duration_s=500,
+                                           mean_rps=400)
+    fixed = simulate(arr, wl, VECTOR_SCHEDULERS["reactive"](), catalog=ct)
+    floor = simulate(arr, wl, VECTOR_SCHEDULERS["accuracy_floor"](),
+                     catalog=ct)
+    assert floor.cost_total < fixed.cost_total
+    assert floor.mean_accuracy >= fixed.mean_accuracy - 1e-9
+    assert floor.acc_violation_rate < fixed.acc_violation_rate
+
+
+# ---------------------------------------------------------------------------
+# Dict-form Action plumbing.
+# ---------------------------------------------------------------------------
+def test_dict_action_variant_field(catalog):
+    wl = _workload()
+    arr = np.full((len(POOL), 130), 8.0)
+    sim = ServingSim(arr, wl, catalog=catalog)
+    i = int(np.argmin(sim.swap.current))    # an arch with an upgrade left
+    key = wl[i].key
+    up = int(sim.swap.current[i]) + 1
+    assert up < sim.var_n[i]
+    sim.observe()
+    sim.apply({key: Action(target=1, variant=up)})
+    assert sim.swap.in_flight[i]
+    assert sim.swap.in_flight.sum() == 1
+    while not sim.done:
+        sim.observe()
+        sim.apply({})
+    assert sim.swap.current[i] == up
+    assert sim.res.variant_swaps == 1
+
+
+# ---------------------------------------------------------------------------
+# RL: the variant head.
+# ---------------------------------------------------------------------------
+def test_procurement_action_variant_head(catalog):
+    from repro.core.rl import N_PROCURE, N_ACTIONS, procurement_action
+
+    wl = _workload()
+    arr = np.full((len(POOL), 10), 5.0)
+    sim = ServingSim(arr, wl, catalog=catalog)
+    obs = sim.observe_pool()
+    n = len(POOL)
+    # hold-first: every legacy action index decodes to variant hold
+    for a in range(N_PROCURE):
+        act = procurement_action(obs, np.full(n, a))
+        assert (act.variant_target == -1).all()
+    assert N_ACTIONS == 3 * N_PROCURE
+    # down / up step from the base index, clipped to the variant range
+    down = procurement_action(obs, np.full(n, N_PROCURE))
+    up = procurement_action(obs, np.full(n, 2 * N_PROCURE))
+    base = sim.swap.current
+    exp_down = np.where(base > 0, base - 1, -1)
+    exp_up = np.where(base < sim.var_n - 1, base + 1, -1)
+    np.testing.assert_array_equal(down.variant_target, exp_down)
+    np.testing.assert_array_equal(up.variant_target, exp_up)
+
+
+def test_pool_env_variant_features_and_reward(catalog):
+    from repro.core.rl import EnvConfig, N_PROCURE, OBS_DIM, PoolServingEnv
+
+    wl = _workload()
+    cfg = EnvConfig(mean_rps=40, duration_s=80, accuracy_bonus=0.001)
+    env = PoolServingEnv(wl, cfg, scenarios=[get_scenario("mmpp_bursts")],
+                         catalog=catalog)
+    obs = env.reset()
+    assert obs.shape == (len(POOL), OBS_DIM)
+    base = env.sim.swap.current
+    np.testing.assert_allclose(
+        obs[:, 10], base / np.maximum(env.sim.var_n - 1, 1), atol=1e-6
+    )
+    # accuracy headroom over the 0.5 floor
+    np.testing.assert_allclose(
+        obs[:, 11], np.clip(env.sim.cur_acc - FLOOR, 0, 1), atol=1e-6
+    )
+    # reward blends the accuracy bonus against cost/violations
+    rng = np.random.default_rng(1)
+    done = False
+    while not done:
+        a = rng.integers(0, 3 * N_PROCURE, size=len(POOL))
+        _, r_arch, done, m = env.step(a)
+        expected = -cfg.reward_scale * (
+            m["cost_arch"]
+            + cfg.violation_penalty * m["violations_arch"]
+            - cfg.accuracy_bonus * m["accuracy_arch"]
+        )
+        np.testing.assert_allclose(r_arch, expected, atol=1e-9)
+    assert env.episode_result().variant_swaps >= 0
+
+
+def test_ppo_trains_variant_head_and_checkpoint_roundtrips(catalog, tmp_path):
+    """PPO smoke over the extended (headroom x offload x variant-move)
+    action space on a catalog-enabled pool env + round-trip through the
+    JSON checkpoint into the deployed scheduler."""
+    from repro.core.rl import (
+        EnvConfig,
+        PPOConfig,
+        PoolServingEnv,
+        RLPoolPolicy,
+        save_policy_params,
+        train_ppo_pool,
+    )
+
+    wl = _workload()
+    cfg = EnvConfig(mean_rps=40, duration_s=60, accuracy_bonus=0.001)
+    env = PoolServingEnv(wl, cfg, scenarios=[get_scenario("flash_anti")],
+                         catalog=catalog, scenario_seed=4)
+    state = train_ppo_pool(env, PPOConfig(iterations=2, rollout_len=60,
+                                          hidden=16, seed=2))
+    assert len(state.history) == 2
+    assert np.isfinite(state.best_reward)
+    path = str(tmp_path / "variant_ckpt.json")
+    save_policy_params(state.params, path)
+    arr = get_scenario("flash_anti").build(len(POOL), duration_s=90,
+                                           mean_rps=40)
+    a = simulate(arr, wl, RLPoolPolicy(params=state.params, greedy=True),
+                 catalog=catalog).summary()
+    b = simulate(arr, wl, RLPoolPolicy(checkpoint=path, greedy=True),
+                 catalog=catalog).summary()
+    assert a == b
+
+
+def test_stale_checkpoint_falls_back(tmp_path):
+    """A checkpoint trained under the pre-variant obs/action space must
+    warn and fall back instead of crashing the deployed policy."""
+    import json
+
+    from repro.core.rl import RLPoolPolicy
+    from repro.core.rl.policy import _fallback_params, params_to_jsonable
+
+    stale = {
+        name: {k: np.asarray(v) for k, v in layer.items()}
+        for name, layer in _fallback_params(0).items()
+    }
+    stale["torso1"]["w"] = stale["torso1"]["w"][:10, :]     # old OBS_DIM
+    stale["pi"]["w"] = stale["pi"]["w"][:, :12]             # old N_ACTIONS
+    stale["pi"]["b"] = stale["pi"]["b"][:12]
+    path = str(tmp_path / "stale.json")
+    with open(path, "w") as f:
+        json.dump({"params": params_to_jsonable(stale), "meta": {}}, f)
+    with pytest.warns(UserWarning, match="STALE"):
+        pol = RLPoolPolicy(checkpoint=path, seed=3)
+    assert not pol.trained
+    wl = _workload(floor=0.0)
+    arr = np.full((len(POOL), 50), 5.0)
+    res = simulate(arr, wl, pol)
+    assert res.total_requests > 0

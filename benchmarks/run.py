@@ -24,6 +24,7 @@ from benchmarks import (
     scenario_grid,
     sim_throughput,
     spot_tier,
+    tier_portfolio,
     variant_grid,
 )
 
@@ -39,6 +40,7 @@ BENCHES = {
     "roofline": roofline.run,
     "scenario_grid": scenario_grid.run,
     "sim_throughput": sim_throughput.run,
+    "tier_portfolio": tier_portfolio.run,
     "variant_grid": variant_grid.run,
 }
 

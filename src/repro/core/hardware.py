@@ -48,6 +48,16 @@ class FleetPricing:
     spot_discount: float = 0.3             # spot $/chip-hour = reserved x this
     spot_preempt_rate: float = 1.0 / 1800  # Poisson reclaim: ~1 per 30 min
     spot_provision_s: float = 120.0        # same slice acquisition latency
+    # --- harvest-VM tier (spare capacity carved from running hosts) -----
+    harvest_discount: float = 0.15         # deepest discount of the portfolio
+    harvest_provision_s: float = 60.0      # no slice boot: host already runs
+    harvest_cap_per_arch: int = 16         # provider ceiling at full harvest
+                                           # availability (level 1.0)
+    # --- multi-region reserved tier (second region, cheaper, farther) ---
+    remote_discount: float = 0.85          # remote $/chip-hour = reserved x this
+    remote_provision_s: float = 300.0      # cross-region slice acquisition
+    remote_egress_s: float = 0.25          # per-request network egress adder
+                                           # (why strict traffic prefers local)
     # --- model-variant swaps (INFaaS-style model-less serving) ----------
     variant_swap_s: float = 60.0           # weight reload onto held slices;
                                            # faster than acquiring a slice,

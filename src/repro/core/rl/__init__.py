@@ -24,10 +24,12 @@ from repro.core.rl.obs import (  # noqa: F401
     N_PROCURE,
     OBS_DIM,
     OFFLOADS,
+    SPOT_MOVES,
     VARIANT_MOVES,
     decode_actions,
     pool_features,
     procurement_action,
+    spot_targets,
     variant_targets,
 )
 from repro.core.rl.policy import (  # noqa: F401

@@ -28,14 +28,19 @@ needs — one controller managing the *whole* heterogeneous pool:
 (A=1, scalar reward, flat observation) — the seed-era interface the
 existing tests and examples drive.
 
-Action space per arch (discrete, 4 headrooms x 3 offload modes = 12):
+Action space per arch (discrete, 4 headrooms x 3 offload modes x 3
+variant moves x 3 spot moves = 108):
   headroom in {0.85, 1.0, 1.15, 1.4} — reserved target is
       ceil(headroom x demand / per-instance-throughput), where demand
-      includes the queued backlog.  Bounded action -> stable credit
-      assignment despite the 120 s provisioning lag (the paper's
-      "adjusts its policy as long as it is within the desired policy
-      target range").
+      includes the queued backlog and the targeted spot fleet's
+      capacity offsets it.  Bounded action -> stable credit assignment
+      despite the 120 s provisioning lag (the paper's "adjusts its
+      policy as long as it is within the desired policy target range").
   offload in {none, blind, slack_aware}
+  variant move in {hold, down, up} along the accuracy-ordered set
+  spot move in {hold, grow, shrink} — steps the preemptible spot fleet
+      (§VI resource heterogeneity); hold-first, so legacy action
+      indices decode unchanged
 """
 from __future__ import annotations
 
@@ -51,6 +56,7 @@ from repro.core.rl.obs import (  # noqa: F401  (re-exported seed surface)
     N_PROCURE,
     OBS_DIM,
     OFFLOADS,
+    SPOT_MOVES,
     VARIANT_MOVES,
     pool_features,
     procurement_action,

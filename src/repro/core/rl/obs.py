@@ -8,15 +8,21 @@ decodes into a procurement decision, so the training environment
 (:mod:`repro.core.rl.policy`) can never drift apart.
 
 The action space is *factored per arch*: each row of the pool picks one
-of ``N_ACTIONS = len(HEADROOMS) x len(OFFLOADS) x len(VARIANT_MOVES)``
-joint (headroom, offload-mode, variant-move) decisions, and the policy
-torso is applied row-wise — a single parameter set controls a pool of
-any size A, which is what lets one trained controller generalize across
-pool compositions.  The variant head is the model-heterogeneity half of
-the paper's joint decision space: ``down`` / ``hold`` / ``up`` steps
-along the arch's accuracy-ordered variant set (``hold`` first, so the
-``N_PROCURE`` legacy actions ``0 .. 11`` decode exactly as the
-pre-variant space did).
+of ``N_ACTIONS = len(HEADROOMS) x len(OFFLOADS) x len(VARIANT_MOVES) x
+len(SPOT_MOVES)`` joint (headroom, offload-mode, variant-move,
+spot-move) decisions, and the policy torso is applied row-wise — a
+single parameter set controls a pool of any size A, which is what lets
+one trained controller generalize across pool compositions.  The
+variant head is the model-heterogeneity half of the paper's joint
+decision space: ``down`` / ``hold`` / ``up`` steps along the arch's
+accuracy-ordered variant set.  The spot head is the
+resource-heterogeneity half (§VI): ``grow`` / ``hold`` / ``shrink``
+steps the arch's preemptible spot fleet, whose capacity then *offsets*
+the reserved sizing rule — the controller can shift base load onto
+discounted slices instead of only resizing the on-demand fleet.  Both
+heads are hold-first, so the ``N_PROCURE`` legacy actions ``0 .. 11``
+(and the pre-spot actions ``0 .. 35``) decode exactly as the earlier
+spaces did.
 
 Everything here is NumPy-only (no JAX): the scheduler registered in
 ``VECTOR_SCHEDULERS`` runs inside the engine's hot tick loop.
@@ -34,17 +40,26 @@ HEADROOMS = (0.85, 1.0, 1.15, 1.4)
 OFFLOADS = ("none", "blind", "slack_aware")
 #: the variant head: hold-first so actions < N_PROCURE are the legacy space
 VARIANT_MOVES = ("hold", "down", "up")
+#: the spot head: hold-first so actions < N_PROCURE * len(VARIANT_MOVES)
+#: are the pre-spot space (hold keeps the current spot fleet, which is 0
+#: until the controller ever grows it — identical to the legacy decode)
+SPOT_MOVES = ("hold", "grow", "shrink")
 N_PROCURE = len(HEADROOMS) * len(OFFLOADS)
-N_ACTIONS = N_PROCURE * len(VARIANT_MOVES)
-OBS_DIM = 12
+N_VARIANT_SPACE = N_PROCURE * len(VARIANT_MOVES)
+N_ACTIONS = N_VARIANT_SPACE * len(SPOT_MOVES)
+OBS_DIM = 16
 
 #: queued backlog is assumed drainable over this horizon when sizing the
 #: reserved fleet (same knob the Paragon scheduler uses)
 BACKLOG_DRAIN_S = 5.0
+#: feature scaling for the (tiny) per-tick spot reclaim probability
+RISK_SCALE = 600.0
 
 _HEADROOM_ARR = np.asarray(HEADROOMS, dtype=np.float64)
 #: VARIANT_MOVES index -> signed step along the variant set
 _VMOVE_DELTA = np.array([0, -1, 1], dtype=np.int64)
+#: SPOT_MOVES index -> signed per-tick step of the spot fleet
+_SMOVE_DELTA = np.array([0, 1, -1], dtype=np.int64)
 
 
 def pool_features(obs: PoolObs, prev_rate: np.ndarray, *,
@@ -52,10 +67,11 @@ def pool_features(obs: PoolObs, prev_rate: np.ndarray, *,
     """``[A, OBS_DIM]`` float32 feature matrix for one tick.
 
     Row ``a`` holds arch ``a``'s normalized load / fleet / feedback
-    state plus the variant axis: the active variant's position in the
-    arch's ordered set and the accuracy headroom over the stream's
-    floor.  ``prev_rate`` is the caller-held previous-tick rate used for
-    the trend feature.
+    state plus the variant axis (the active variant's position in the
+    arch's ordered set, the accuracy headroom over the stream's floor)
+    and the spot-tier state the spot head steers by (held / in-flight
+    spot instances, reclaim risk, harvest availability).  ``prev_rate``
+    is the caller-held previous-tick rate used for the trend feature.
     """
     rs, fs = rate_scale, fleet_scale
     f = np.empty((len(obs.keys), OBS_DIM), dtype=np.float32)
@@ -71,21 +87,28 @@ def pool_features(obs: PoolObs, prev_rate: np.ndarray, *,
     f[:, 9] = obs.last_violations / rs
     f[:, 10] = obs.active_variant / np.maximum(obs.n_variants - 1, 1)
     f[:, 11] = np.clip(obs.accuracy - obs.accuracy_floor, 0.0, 1.0)
+    f[:, 12] = obs.n_spot / fs
+    f[:, 13] = obs.n_spot_pending / fs
+    f[:, 14] = np.minimum(obs.spot_reclaim_risk * RISK_SCALE, 1.0)
+    f[:, 15] = obs.harvest_level
     return f
 
 
 def decode_actions(actions: np.ndarray) -> tuple:
     """Split per-arch discrete actions into ``(headroom[A], offload[A],
-    vmove[A])``.
+    vmove[A], smove[A])``.
 
     ``offload`` comes back as the engine's integer codes (``OFFLOADS``
     is index-aligned with ``OFFLOAD_MODES``); ``vmove`` is the signed
-    variant step in ``{-1, 0, +1}``.
+    variant step and ``smove`` the signed spot-fleet step, both in
+    ``{-1, 0, +1}``.
     """
     actions = np.asarray(actions, dtype=np.int64)
-    proc = actions % N_PROCURE
-    vmove = _VMOVE_DELTA[actions // N_PROCURE]
-    return _HEADROOM_ARR[proc // len(OFFLOADS)], proc % len(OFFLOADS), vmove
+    smove = _SMOVE_DELTA[actions // N_VARIANT_SPACE]
+    rest = actions % N_VARIANT_SPACE
+    proc = rest % N_PROCURE
+    vmove = _VMOVE_DELTA[rest // N_PROCURE]
+    return _HEADROOM_ARR[proc // len(OFFLOADS)], proc % len(OFFLOADS), vmove, smove
 
 
 def variant_targets(obs: PoolObs, vmove: np.ndarray) -> np.ndarray:
@@ -99,20 +122,43 @@ def variant_targets(obs: PoolObs, vmove: np.ndarray) -> np.ndarray:
     return np.where(tgt == obs.active_variant, -1, tgt).astype(np.int64)
 
 
+def spot_targets(obs: PoolObs, smove: np.ndarray) -> np.ndarray:
+    """Signed spot steps -> engine ``spot_target`` instance counts.
+
+    ``hold`` MAINTAINS the observed in-flight spot fleet (active +
+    provisioning): instances reclaimed since the observation are
+    re-launched toward the same size, so hold means "auto-heal at this
+    level" and ``shrink`` is the only way the fleet decays — while a
+    fleet that was never grown stays at 0, which is what keeps the
+    legacy (pre-spot) action decode unchanged.  ``grow`` / ``shrink``
+    step the level by one instance per tick (60 instances/min against a
+    120 s provisioning pipeline), clipped at 0.
+    """
+    keep = obs.n_spot + obs.n_spot_pending
+    return np.maximum(keep + smove, 0).astype(np.int64)
+
+
 def procurement_action(obs: PoolObs, actions: np.ndarray) -> PoolAction:
     """Decode factored actions into the engine's :class:`PoolAction`.
 
     The reserved target is ``ceil(headroom x demand / throughput)`` with
     demand = smoothed rate + queued backlog drained over
     ``BACKLOG_DRAIN_S`` — the same sizing rule the legacy single-arch
-    env applied per arch.  ``throughput`` is the ACTIVE variant's, so
-    fleet sizing and variant choice stay coupled.
+    env applied per arch — *minus the capacity of the targeted spot
+    fleet*: spot instances substitute for reserved ones rather than
+    stack on top, which is what makes the spot head a cost lever (at
+    zero spot the rule is exactly the legacy one).  ``throughput`` is
+    the ACTIVE variant's, so fleet sizing and variant choice stay
+    coupled.
     """
-    headroom, offload, vmove = decode_actions(actions)
+    headroom, offload, vmove, smove = decode_actions(actions)
+    spot = spot_targets(obs, smove)
     backlog = obs.queue_strict + obs.queue_relaxed
     demand = obs.ewma_rate + backlog / BACKLOG_DRAIN_S
+    residual = headroom * demand - spot * obs.throughput
     target = np.maximum(
-        1, np.ceil(headroom * demand / obs.throughput)
+        1, np.ceil(residual / obs.throughput)
     ).astype(np.int64)
     return PoolAction(target=target, offload=offload,
+                      spot_target=spot,
                       variant_target=variant_targets(obs, vmove))

@@ -13,6 +13,11 @@ All five schemes share one interface: ``policy(tick, obs) -> {arch: Action}``.
   paragon     — this paper's scheme: latency-class-aware offload (strict
                 queries only; relaxed ones ride out the spike in queue) on
                 top of reactive scaling, consulting the load monitor.
+
+Beyond-paper tiers ride the same interface: ``spot_paragon`` (on-demand
+floor + preemptible spot base) and ``portfolio`` (reserved floor +
+remote-region relaxed base + harvest VMs split by reclaim risk + spot
+churn buffer — the full tier portfolio).
 """
 from __future__ import annotations
 
@@ -191,6 +196,72 @@ class SpotParagonPolicy(ParagonPolicy):
 
 
 SCHEDULERS["spot_paragon"] = SpotParagonPolicy
+
+
+@dataclass
+class PortfolioPolicy(ParagonPolicy):
+    """Beyond-paper: the full TIER PORTFOLIO over Paragon's class-aware
+    offload — the paper's "confounding array of resource types" under
+    one procurement rule.
+
+    Capacity is layered by reliability and price:
+
+    * an on-demand **reserved** floor sized for the strict-class share
+      (SLO-critical capacity that survives any reclaim wave);
+    * a **remote**-region reserved slice for a fraction of the steady
+      relaxed base (cheaper, slower to provision, pays a per-request
+      egress adder — which is fine for relaxed traffic, and the engine
+      serves strict from local capacity first anyway);
+    * **harvest** VMs for the bulk of the residual base load — the
+      deepest discount, sized *by reclaim risk*: the harvest share
+      follows the provider's availability signal (level high -> lean on
+      harvest; level sagging -> shift toward spot before the ceiling
+      evicts), and is capped by the granted ceiling;
+    * **spot** for whatever the harvest grant leaves uncovered, with a
+      churn buffer against its i.i.d. reclaims;
+    * class-aware burst offload (inherited) absorbs the transient dips
+      any reclaim leaves behind.
+    """
+
+    strict_share: float = 0.25     # reserved floor = strict-class share
+    remote_frac: float = 0.3       # fraction of the steady relaxed base
+                                   # placed in the remote region
+    harvest_margin: float = 0.15   # risk margin under the harvest signal
+    harvest_max_frac: float = 0.8  # never bet more of the residual on
+                                   # harvest than this
+    harvest_buffer: float = 1.1    # small headroom on the harvest slice
+    spot_buffer: float = 1.25      # preemption churn absorber
+
+    def __call__(self, tick: int, obs: Dict[str, ArchObs]) -> Dict[str, Action]:
+        out = {}
+        for a, o in obs.items():
+            demand = o.ewma_rate + o.queue_len / self.drain_horizon_s
+            floor = max(1, math.ceil(demand * self.strict_share / o.throughput))
+            remote = int(
+                self.remote_frac * (1 - self.strict_share) * o.ewma_rate
+                / o.throughput
+            )
+            residual = max(
+                0.0, demand - (floor + remote) * o.throughput
+            )
+            h_frac = min(
+                max(o.harvest_level - self.harvest_margin, 0.0),
+                self.harvest_max_frac,
+            )
+            h_want = math.ceil(
+                residual * h_frac * self.harvest_buffer / o.throughput
+            )
+            harvest = min(h_want, o.harvest_ceiling)
+            spot_resid = max(0.0, residual - harvest * o.throughput)
+            spot = math.ceil(spot_resid * self.spot_buffer / o.throughput)
+            out[a] = Action(
+                target=floor, spot_target=spot, harvest_target=harvest,
+                remote_target=remote, offload="slack_aware",
+            )
+        return out
+
+
+SCHEDULERS["portfolio"] = PortfolioPolicy
 
 
 # ---------------------------------------------------------------------------
@@ -438,6 +509,44 @@ class VectorSpotParagonPolicy(VectorParagonPolicy):
         )
 
 
+@dataclass
+class VectorPortfolioPolicy(VectorParagonPolicy):
+    """Vector form of :class:`PortfolioPolicy` (same knobs, same
+    decisions: reserved floor, remote relaxed base, harvest by reclaim
+    risk under the granted ceiling, spot for the rest)."""
+
+    strict_share: float = 0.25
+    remote_frac: float = 0.3
+    harvest_margin: float = 0.15
+    harvest_max_frac: float = 0.8
+    harvest_buffer: float = 1.1
+    spot_buffer: float = 1.25
+
+    def __call__(self, tick: int, obs: PoolObs) -> PoolAction:
+        thr = obs.throughput
+        demand = obs.ewma_rate + obs.queue_len / self.drain_horizon_s
+        floor = _scale_target_vec(thr, demand, self.strict_share)
+        remote = (
+            self.remote_frac * (1 - self.strict_share) * obs.ewma_rate / thr
+        ).astype(np.int64)
+        residual = np.maximum(0.0, demand - (floor + remote) * thr)
+        h_frac = np.minimum(
+            np.maximum(obs.harvest_level - self.harvest_margin, 0.0),
+            self.harvest_max_frac,
+        )
+        h_want = np.ceil(residual * h_frac * self.harvest_buffer / thr)
+        harvest = np.minimum(h_want, obs.harvest_ceiling).astype(np.int64)
+        spot_resid = np.maximum(0.0, residual - harvest * thr)
+        spot = np.ceil(spot_resid * self.spot_buffer / thr).astype(np.int64)
+        return PoolAction(
+            target=floor,
+            spot_target=spot,
+            harvest_target=harvest,
+            remote_target=remote,
+            offload=np.full(len(obs.keys), OFFLOAD_SLACK_AWARE, dtype=np.int64),
+        )
+
+
 def _swap_aware_target(obs: PoolObs, bursty_threshold: float,
                        flat_cushion: float, drain_horizon_s: float) -> np.ndarray:
     """Paragon sizing against the slower of the active / in-flight
@@ -523,6 +632,7 @@ VECTOR_SCHEDULERS = {
     "mixed": VectorMixedPolicy,
     "paragon": VectorParagonPolicy,
     "spot_paragon": VectorSpotParagonPolicy,
+    "portfolio": VectorPortfolioPolicy,
     "infaas_variant": VectorInfaasVariantPolicy,
     "accuracy_floor": VectorAccuracyFloorPolicy,
 }

@@ -19,6 +19,8 @@ from repro.core.sim.accounting import Ledger, SimResult  # noqa: F401
 from repro.core.sim.engine import ArchView, ServingSim, simulate  # noqa: F401
 from repro.core.sim.fleet import (  # noqa: F401
     BurstTier,
+    HarvestVMTier,
+    MultiRegionReservedTier,
     ProvisionPipeline,
     ResourceTier,
     SpotTier,

@@ -74,6 +74,13 @@ class SimResult:
             "cost_reserved": round(self.cost_reserved, 4),
             "cost_spot": round(self.cost_spot, 4),
             "cost_burst": round(self.cost_burst, 4),
+            # tiers beyond the canonical three (harvest, remote, ...)
+            # appear under their posted names — runs that never used them
+            # report the same keys as before
+            **{
+                f"cost_{t}": round(v, 4)
+                for t, v in sorted(self.cost_other.items())
+            },
             "preemptions": self.preemptions,
             "violation_rate": round(self.violation_rate, 5),
             "violations_strict": round(self.violations_strict, 1),

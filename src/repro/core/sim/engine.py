@@ -4,10 +4,13 @@ Time-stepped fluid simulation at 1 s ticks (paper §II-C / §IV
 methodology): trace-driven arrivals fan out over a model pool, each
 (arch, latency-class) pair keeps an age-bucketed FIFO queue
 (:mod:`repro.core.sim.queues`), resource tiers serve at their profiled
-throughput (:mod:`repro.core.sim.fleet`), and a procurement policy
-decides — every tick — the per-tier fleet targets and which queued
-requests to offload to burst instances.  Metrics accumulate in the
-ledger (:mod:`repro.core.sim.accounting`).
+throughput (:mod:`repro.core.sim.fleet` — reserved / spot / harvest /
+remote behind one interface, driven by generic provision / serve /
+account loops; strict-class traffic is served from zero-egress local
+capacity first), and a procurement policy decides — every tick — the
+per-tier fleet targets and which queued requests to offload to burst
+instances.  Metrics accumulate in the ledger
+(:mod:`repro.core.sim.accounting`), tier costs keyed by tier name.
 
 All pool state is structure-of-arrays, so one tick costs O(A) NumPy work
 however many architectures the pool holds; a 64-arch 24 h trace runs in
@@ -40,7 +43,14 @@ from repro.core.hardware import PRICING, FleetPricing
 from repro.core.load_monitor import LoadMonitor, PoolLoadMonitor
 from repro.core.profiles import ModelProfile, get_profile
 from repro.core.sim.accounting import Ledger, SimResult
-from repro.core.sim.fleet import BurstTier, ResourceTier, SpotTier, SwapPipeline
+from repro.core.sim.fleet import (
+    BurstTier,
+    HarvestVMTier,
+    MultiRegionReservedTier,
+    ResourceTier,
+    SpotTier,
+    SwapPipeline,
+)
 from repro.core.sim.queues import QueueArray
 from repro.core.sim.types import (
     OFFLOAD_MODES,
@@ -217,16 +227,18 @@ class ServingSim:
         self.lat_b1 = lat_b1
 
         # model-variant axis: each arch serves its *active* variant's
-        # service rate / chip footprint / accuracy; without a catalog the
-        # arch is its own sole variant (multipliers 1.0 — bit-identical
-        # to the variant-blind engine).  Queue slack and burst latency
-        # stay pinned to the base variant's batch-1 latency: they encode
-        # the stream's SLO geometry, not the deployed weights.
+        # service rate / chip footprint / accuracy, and burst invocations
+        # observe its batch-1 latency; without a catalog the arch is its
+        # own sole variant (multipliers 1.0 — bit-identical to the
+        # variant-blind engine).  Queue slack stays pinned to the base
+        # variant's batch-1 latency: it encodes the stream's SLO
+        # geometry, not the deployed weights.
         self.acc_floor = np.array([w.min_accuracy for w in workload])
         if catalog is None:
             self.var_acc = np.array([[p.cfg.quality] for p in profs])
             self.var_smult = np.ones((n, 1))
             self.var_cmult = np.ones((n, 1))
+            self.var_lmult = np.ones((n, 1))
             self.var_n = np.ones(n, dtype=np.int64)
             base_idx = np.zeros(n, dtype=np.int64)
             self.var_lo = np.zeros(n, dtype=np.int64)
@@ -236,6 +248,7 @@ class ServingSim:
             self.var_acc = va["accuracy"]
             self.var_smult = va["service_mult"]
             self.var_cmult = va["cost_mult"]
+            self.var_lmult = va["lat_mult"]
             self.var_n = va["n_variants"]
             base_idx = va["base_idx"]
             self.var_lo = va["floor_lo"]
@@ -249,10 +262,32 @@ class ServingSim:
         self.q_strict = QueueArray(n, STRICT.slo_s, slack_strict)
         self.q_relaxed = QueueArray(n, RELAXED.slo_s, slack_relaxed)
 
-        # resource tiers: reserved slices + spot slices serve the queues;
-        # the burst pool absorbs offloads per-invocation
+        # resource tiers: reserved / spot / harvest / remote slices serve
+        # the queues; the burst pool absorbs offloads per-invocation.
+        # The engine only speaks the ResourceTier interface — a new
+        # offering registers in ``aux_tiers`` below and the generic
+        # provision / serve / account loops drive it.
         self.reserved = ResourceTier(n, pricing)
         self.spot = SpotTier(n, pricing)
+        self.harvest = HarvestVMTier(n, pricing, seed=seed)
+        self.remote = MultiRegionReservedTier(n, pricing)
+        #: policy-targetable tiers beyond reserved, keyed by action field
+        self.aux_tiers: Dict[str, ResourceTier] = {
+            "spot": self.spot, "harvest": self.harvest, "remote": self.remote,
+        }
+        # lazily-activated: an untargeted tier costs nothing per tick
+        self._tier_live: Dict[str, bool] = {k: False for k in self.aux_tiers}
+        # local (zero-egress) capacity serves strict-class traffic first;
+        # remote-group capacity pays its egress adder on lateness.  Both
+        # groups are derived from the tier interface, so a new tier
+        # lands in the right serve group by registration alone.
+        self._remote_group = [
+            t for t in (self.reserved, *self.aux_tiers.values())
+            if t.egress_latency_s() > 0
+        ]
+        self._local_aux = [
+            t for t in self.aux_tiers.values() if t.egress_latency_s() == 0
+        ]
         self.burst = BurstTier(
             pricing,
             lat_b1=lat_b1,
@@ -313,7 +348,31 @@ class ServingSim:
         self._p2m_vec = np.ones(n)
         self._rates = np.zeros(n)
         self._pool_obs: Optional[PoolObs] = None
-        self._spot_live = False
+
+        # tier-portfolio observation state: idle tiers share precomputed
+        # read-only records (the common reserved-only tick stays O(A)
+        # with no extra copies); live tiers overwrite their entries
+        zeros_i = np.zeros(n, dtype=np.int64)
+        zeros_i.setflags(write=False)
+        risk = np.full(n, self.spot.reclaim_probability())
+        risk.setflags(write=False)
+        self._static_tier_obs = {
+            "n_spot_pending": zeros_i,
+            "n_harvest": zeros_i, "n_harvest_pending": zeros_i,
+            "n_remote": zeros_i, "n_remote_pending": zeros_i,
+            "spot_reclaim_risk": risk,
+        }
+        # remote-group capacity books lateness against an egress-tightened
+        # slack (which may be negative: egress alone can blow the SLO)
+        egress = max(
+            (t.egress_latency_s() for t in self._remote_group), default=0.0
+        )
+        self._remote_late_strict = self.q_strict.late_mask_for(
+            np.floor(STRICT.slo_s - lat_b1 - egress)
+        )
+        self._remote_late_relaxed = self.q_relaxed.late_mask_for(
+            np.floor(RELAXED.slo_s - lat_b1 - egress)
+        )
 
         # per-arch flow accounting (arrived == served_vm + served_burst +
         # dropped + queued, every tick; `per_arch_counts` exposes copies)
@@ -361,12 +420,16 @@ class ServingSim:
         self.cur_acc = np.take_along_axis(self.var_acc, cur, 1)[:, 0]
         smult = np.take_along_axis(self.var_smult, cur, 1)[:, 0]
         cmult = np.take_along_axis(self.var_cmult, cur, 1)[:, 0]
+        lmult = np.take_along_axis(self.var_lmult, cur, 1)[:, 0]
         self.cur_smult = smult
         self.eff_throughput = self.throughput * smult
         self.eff_chips = self.chips * cmult
+        # burst invocations hit the *active* variant's warm pool: both
+        # the billing and the batch-1 latency follow the swap
         self.burst.cost_per_request = (
             self.eff_chips / self.eff_throughput
         ) * self.pricing.burst_chip_s + self.pricing.burst_invocation_fee
+        self.burst.lat_b1 = self.lat_b1 * lmult
 
     # ------------------------------------------------------------------
     @property
@@ -453,6 +516,25 @@ class ServingSim:
                 ),
             }
 
+        # tier-portfolio state: idle tiers reuse the precomputed statics;
+        # the harvest signal is provider-side time-varying state, so its
+        # level/ceiling are materialized fresh every tick (the signal
+        # advances whether or not any policy holds harvest capacity)
+        tobs = dict(self._static_tier_obs)
+        n = len(self.keys)
+        tobs["harvest_level"] = np.full(n, self.harvest.level)
+        tobs["harvest_ceiling"] = np.full(
+            n, self.harvest.ceiling(), dtype=np.int64
+        )
+        if self._tier_live["spot"]:
+            tobs["n_spot_pending"] = self.spot.pipeline.total.copy()
+        if self._tier_live["harvest"]:
+            tobs["n_harvest"] = self.harvest.active.copy()
+            tobs["n_harvest_pending"] = self.harvest.pipeline.total.copy()
+        if self._tier_live["remote"]:
+            tobs["n_remote"] = self.remote.active.copy()
+            tobs["n_remote_pending"] = self.remote.pipeline.total.copy()
+
         self._pool_obs = PoolObs(
             keys=self.keys,
             rate=rates,
@@ -468,6 +550,7 @@ class ServingSim:
             queue_strict=self.q_strict.totals().copy(),
             queue_relaxed=self.q_relaxed.totals().copy(),
             last_violations=self.last_viol_arch.copy(),
+            **tobs,
             **vobs,
         )
         return self._pool_obs
@@ -488,6 +571,14 @@ class ServingSim:
                 n_spot=int(p.n_spot[i]),
                 throughput=float(p.throughput[i]),
                 utilization=float(p.utilization[i]),
+                n_spot_pending=int(p.n_spot_pending[i]),
+                n_harvest=int(p.n_harvest[i]),
+                n_harvest_pending=int(p.n_harvest_pending[i]),
+                n_remote=int(p.n_remote[i]),
+                n_remote_pending=int(p.n_remote_pending[i]),
+                spot_reclaim_risk=float(p.spot_reclaim_risk[i]),
+                harvest_level=float(p.harvest_level[i]),
+                harvest_ceiling=int(p.harvest_ceiling[i]),
                 active_variant=int(p.active_variant[i]),
                 n_variants=int(p.n_variants[i]),
                 accuracy=float(p.accuracy[i]),
@@ -513,6 +604,8 @@ class ServingSim:
         target = np.empty(n, dtype=np.int64)
         offload = np.zeros(n, dtype=np.int64)
         spot_target = np.zeros(n, dtype=np.int64)
+        harvest_target = np.zeros(n, dtype=np.int64)
+        remote_target = np.zeros(n, dtype=np.int64)
         variant_target = np.full(n, -1, dtype=np.int64)
         for i, k in enumerate(self.keys):
             act = actions.get(k)
@@ -523,8 +616,11 @@ class ServingSim:
                 # unknown offload values mean "none", as in the seed loop
                 offload[i] = _OFFLOAD_CODE.get(act.offload, 0)
                 spot_target[i] = act.spot_target
+                harvest_target[i] = act.harvest_target
+                remote_target[i] = act.remote_target
                 variant_target[i] = act.variant
-        return self._step(target, offload, spot_target, variant_target)
+        return self._step(target, offload, spot_target, variant_target,
+                          harvest_target, remote_target)
 
     def apply_pool(self, action: PoolAction) -> dict:
         """Vectorized counterpart of :meth:`apply`."""
@@ -534,6 +630,8 @@ class ServingSim:
             action.offload_codes(n),
             action.spot_targets(n),
             action.variant_targets(n),
+            action.harvest_targets(n),
+            action.remote_targets(n),
         )
 
     def _step(
@@ -542,6 +640,8 @@ class ServingSim:
         offload: np.ndarray,
         spot_target: np.ndarray,
         variant_target: Optional[np.ndarray] = None,
+        harvest_target: Optional[np.ndarray] = None,
+        remote_target: Optional[np.ndarray] = None,
     ) -> dict:
         assert self._pool_obs is not None, "call observe() before apply()"
         tick = self.tick
@@ -566,22 +666,58 @@ class ServingSim:
                     tick, np.minimum(variant_target, self.var_n - 1)
                 )
 
-        # provision: each tier runs its events + pipeline toward its target
+        # provision: each tier runs its events + pipeline toward its
+        # target.  Aux tiers activate lazily — an untargeted tier is
+        # skipped entirely, so the reserved-only tick stays unchanged.
         self.reserved.begin_tick(tick, self.rng, led)
         self.reserved.set_target(tick, target)
-        if self._spot_live or spot_target.any():
-            self.spot.begin_tick(tick, self.rng, led)
-            self.spot.set_target(tick, spot_target)
-            self._spot_live = bool(
-                self.spot.active.any() or self.spot.pipeline.total.any()
-            )
+        aux_targets = {
+            "spot": spot_target, "harvest": harvest_target,
+            "remote": remote_target,
+        }
+        for name, tier in self.aux_tiers.items():
+            tgt = aux_targets[name]
+            if self._tier_live[name] or (tgt is not None and tgt.any()):
+                tier.begin_tick(tick, self.rng, led)
+                tier.set_target(tick, tgt)
+                self._tier_live[name] = bool(
+                    tier.active.any() or tier.pipeline.total.any()
+                )
+            else:
+                # provider-side state (the harvest availability signal)
+                # evolves with time, not with usage
+                tier.idle_tick(tick)
 
         # serve from the class queues, strict first, oldest first, at the
         # ACTIVE variant's service rate (old variant while a swap is in
-        # flight — the weight reload has not landed yet)
-        capacity = (self.reserved.active + self.spot.active) * self.eff_throughput
+        # flight — the weight reload has not landed yet).  Strict traffic
+        # prefers LOCAL capacity: zero-egress tiers serve first; the
+        # remote group's capacity follows, booking lateness against its
+        # egress-tightened slack.
+        remote_live = any(
+            self._tier_live.get(t.name, False) for t in self._remote_group
+        )
+        local_active = self.reserved.active
+        for t in self._local_aux:
+            local_active = local_active + t.active
+        capacity = local_active * self.eff_throughput
         served_s, late_s = self.q_strict.serve(tick, capacity)
-        served_r, late_r = self.q_relaxed.serve(tick, capacity - served_s)
+        if remote_live:
+            remote_cap = sum(
+                t.active for t in self._remote_group
+            ) * self.eff_throughput
+            srs, lrs = self.q_strict.serve(
+                tick, remote_cap, late_mask=self._remote_late_strict
+            )
+            served_r, late_r = self.q_relaxed.serve(tick, capacity - served_s)
+            srr, lrr = self.q_relaxed.serve(
+                tick, remote_cap - srs, late_mask=self._remote_late_relaxed
+            )
+            served_s, late_s = served_s + srs, late_s + lrs
+            served_r, late_r = served_r + srr, late_r + lrr
+            capacity = capacity + remote_cap
+        else:
+            served_r, late_r = self.q_relaxed.serve(tick, capacity - served_s)
         served = served_s + served_r
         answered = served.copy()       # accuracy accounting: who answered
         led.add_served_vm(float(served.sum()))
@@ -646,14 +782,16 @@ class ServingSim:
         else:
             acc_viol = self._zero_arch
 
-        # accounting (cost attributed per arch as each tier posts, at the
-        # active variant's chip footprint)
+        # accounting (cost attributed per arch as each tier posts — by
+        # name, at the active variant's chip footprint; a new tier needs
+        # no ledger changes beyond its registration above)
         chip_s = self.reserved.account(led, self.eff_chips)
         self.cost_arch += chip_s * self.reserved.price_per_chip_s()
-        if self._spot_live:
-            spot_chip_s = self.spot.account(led, self.eff_chips)
-            self.cost_arch += spot_chip_s * self.spot.price_per_chip_s()
-            chip_s = chip_s + spot_chip_s
+        for name, tier in self.aux_tiers.items():
+            if self._tier_live[name]:
+                t_chip_s = tier.account(led, self.eff_chips)
+                self.cost_arch += t_chip_s * tier.price_per_chip_s()
+                chip_s = chip_s + t_chip_s
         led.add_capacity(chip_s, self._rates, self.eff_throughput, self.eff_chips)
 
         self.tick += 1

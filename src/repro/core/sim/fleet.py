@@ -1,12 +1,16 @@
 """Resource tiers — the procurement side of the serving fleet.
 
-The paper's system buys capacity from heterogeneous cloud offerings:
-long-lived reserved slices (VMs), preemptible spot slices (§VI), and a
-per-invocation burst pool (serverless functions).  Each offering is one
-:class:`ResourceTier`: it owns its pool-wide instance counts as arrays,
-runs its provisioning pipeline each tick, and knows its price.  Adding a
-new offering (harvest VMs, a second region, ...) is one subclass — the
-engine only speaks the tier interface.
+The paper's system buys capacity from heterogeneous cloud offerings —
+its "confounding array of resource types": long-lived reserved slices
+(VMs), preemptible spot slices (§VI), deeply-discounted harvest VMs
+whose availability follows a pool-correlated signal, a second reserved
+region behind a network-egress adder, and a per-invocation burst pool
+(serverless functions).  Each offering is one :class:`ResourceTier`: it
+owns its pool-wide instance counts as arrays, runs its provisioning
+pipeline each tick, and knows its price.  Adding a new offering is one
+subclass — the engine only speaks the tier interface
+(:class:`HarvestVMTier` and :class:`MultiRegionReservedTier` are
+exactly that: zero engine-tick-loop changes beyond registration).
 
 All state is structure-of-arrays over the pool: ``active[a]`` instances
 per arch, and a :class:`ProvisionPipeline` ring buffer of launches in
@@ -142,9 +146,20 @@ class ResourceTier:
     def price_per_chip_s(self) -> float:
         return self.pricing.reserved_chip_s
 
+    def egress_latency_s(self) -> float:
+        """Per-request latency adder for capacity served from this tier
+        (0 for in-region tiers; the engine serves strict-class traffic
+        from zero-egress capacity first)."""
+        return 0.0
+
     # -- tick protocol -------------------------------------------------------
     def begin_tick(self, tick: int, rng: np.random.Generator, ledger: Ledger) -> None:
         """Tier-internal events before provisioning (default: none)."""
+
+    def idle_tick(self, tick: int) -> None:
+        """Called on ticks the tier is neither held nor targeted, so
+        provider-side state (e.g. an availability signal) keeps evolving
+        as a function of time, not of usage history (default: none)."""
 
     def set_target(self, tick: int, target: np.ndarray) -> None:
         self.active += self.pipeline.pop_ready(tick)
@@ -186,12 +201,121 @@ class SpotTier(ResourceTier):
     def price_per_chip_s(self) -> float:
         return self.pricing.reserved_chip_s * self.pricing.spot_discount
 
+    def reclaim_probability(self) -> float:
+        """Per-instance per-tick reclaim probability (policy observable)."""
+        return 1.0 - math.exp(-self.pricing.spot_preempt_rate)
+
     def begin_tick(self, tick: int, rng: np.random.Generator, ledger: Ledger) -> None:
+        p_reclaim = self.reclaim_probability()
         if self.active.any():
-            p_reclaim = 1.0 - math.exp(-self.pricing.spot_preempt_rate)
             reclaimed = rng.binomial(self.active, p_reclaim)
             self.active -= reclaimed
             ledger.add_preemptions(int(reclaimed.sum()))
+        if self.pipeline.total.any():
+            # in-flight launches are NOT immune: the provider reclaims
+            # provisioning slices at the same rate, so a policy cannot
+            # hide capacity in the pipeline through a reclaim wave.
+            # Only the occupied ring columns are sampled — the buffer is
+            # [A, provision_latency] but launches cluster in a few ticks.
+            buf = self.pipeline.buf
+            cols = np.flatnonzero(buf.any(axis=0))
+            lost = rng.binomial(buf[:, cols], p_reclaim)
+            buf[:, cols] -= lost
+            self.pipeline.total -= lost.sum(axis=1)
+            ledger.add_preemptions(int(lost.sum()))
+
+
+# ---------------------------------------------------------------------------
+# Harvest-VM tier: spare capacity carved from running hosts — the deepest
+# discount, but availability follows a pool-correlated harvest signal.
+# ---------------------------------------------------------------------------
+class HarvestVMTier(ResourceTier):
+    """Deeply discounted instances built from harvested spare capacity.
+
+    The provider's harvestable capacity is a seeded mean-reverting signal
+    ``level(t)`` in ``[LEVEL_MIN, 1]`` shared by the whole pool: each arch
+    may hold at most ``floor(level x harvest_cap_per_arch)`` instances,
+    and when the signal drops, every arch's excess above the new ceiling
+    is evicted in the same tick — reclaims are *correlated across the
+    pool* (the datacenter got busy), unlike the spot tier's i.i.d.
+    per-instance draws.  The signal advances exactly once per engine
+    tick (``begin_tick`` while the tier is engaged, ``idle_tick``
+    otherwise) from the tier's own seeded generator, so the trajectory
+    is a pure function of time — deterministic, independent of both the
+    engine's spot-reclaim stream and of which policy happens to use the
+    tier.
+    """
+
+    name = "harvest"
+
+    LEVEL_MIN = 0.25               # deepest harvest trough
+    LEVEL_MEAN = 0.85              # long-run availability
+    LEVEL_KAPPA = 0.02             # mean reversion per tick
+    LEVEL_SIGMA = 0.03             # per-tick signal noise
+
+    def __init__(self, n_archs: int, pricing: FleetPricing, seed: int = 0):
+        super().__init__(n_archs, pricing)
+        self.level = 1.0
+        self._sig_rng = np.random.default_rng(seed + 0x9A27)
+
+    def provision_latency_s(self) -> float:
+        return self.pricing.harvest_provision_s
+
+    def price_per_chip_s(self) -> float:
+        return self.pricing.reserved_chip_s * self.pricing.harvest_discount
+
+    def ceiling(self) -> int:
+        """Per-arch instance ceiling at the current harvest level."""
+        return int(self.level * self.pricing.harvest_cap_per_arch)
+
+    def _advance(self) -> None:
+        self.level = float(np.clip(
+            self.level
+            + self.LEVEL_KAPPA * (self.LEVEL_MEAN - self.level)
+            + self.LEVEL_SIGMA * self._sig_rng.standard_normal(),
+            self.LEVEL_MIN, 1.0,
+        ))
+
+    def idle_tick(self, tick: int) -> None:
+        self._advance()
+
+    def begin_tick(self, tick: int, rng: np.random.Generator, ledger: Ledger) -> None:
+        self._advance()
+        ceiling = self.ceiling()
+        evicted = np.maximum(self.active - ceiling, 0)
+        if evicted.any():
+            self.active -= evicted
+            ledger.add_preemptions(int(evicted.sum()))
+        # in-flight launches above the remaining room never materialize
+        # (cancelled, not evicted: they were never running)
+        over = np.maximum(self.active + self.pipeline.total - ceiling, 0)
+        if over.any():
+            self.pipeline.cancel_newest(tick, over)
+
+    def set_target(self, tick: int, target: np.ndarray) -> None:
+        # the provider only grants capacity under the harvested ceiling
+        super().set_target(tick, np.minimum(target, self.ceiling()))
+
+
+# ---------------------------------------------------------------------------
+# Multi-region reserved tier: a second reserved pool, cheaper but farther.
+# ---------------------------------------------------------------------------
+class MultiRegionReservedTier(ResourceTier):
+    """Reserved slices in a second region: same reliability, a discount,
+    a much longer slice-acquisition latency, and a per-request network
+    egress adder on everything it serves — which is why the engine serves
+    strict-class traffic from local (zero-egress) capacity first."""
+
+    name = "remote"
+
+    def provision_latency_s(self) -> float:
+        return self.pricing.remote_provision_s
+
+    def price_per_chip_s(self) -> float:
+        return self.pricing.reserved_chip_s * self.pricing.remote_discount
+
+    def egress_latency_s(self) -> float:
+        return self.pricing.remote_egress_s
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +344,8 @@ class BurstTier:
         self.last_used = np.zeros(n) if prewarm else np.full(n, -math.inf)
 
     def latency(self, tick: int) -> np.ndarray:
+        """Latency the *first* invocation of the tick observes (the
+        pool-warming one; followers in the same tick hit a warm pool)."""
         cold = (tick - self.last_used) > self.pricing.burst_idle_timeout_s
         return self.pricing.burst_spinup_s + self.lat_b1 + cold * self.cold_start_s
 
@@ -229,9 +355,17 @@ class BurstTier:
     ) -> np.ndarray:
         """Send ``counts[a]`` requests to the burst pool right now;
         returns the per-arch violation counts (requests whose burst
-        latency exceeded the class SLO)."""
-        lat = self.latency(tick)
-        viol = counts * (lat > slo_s)
+        latency exceeded the class SLO).
+
+        Only the pool-warming FIRST invocation of a cold batch pays
+        ``cold_start_s`` — every request after it in the same tick hits
+        the pool it just warmed (the idle timeout is minutes, not
+        sub-second), so a cold batch of N violates at most 1 + the warm
+        late mass, not N."""
+        lat_first = self.latency(tick)
+        lat_warm = self.pricing.burst_spinup_s + self.lat_b1
+        first = np.minimum(counts, 1.0)
+        viol = first * (lat_first > slo_s) + (counts - first) * (lat_warm > slo_s)
         ledger.add_burst(
             cost=float((self.cost_per_request * counts).sum()),
             served=float(counts.sum()),

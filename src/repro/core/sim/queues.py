@@ -108,14 +108,29 @@ class QueueArray:
     def totals(self) -> np.ndarray:
         return self.total
 
+    def late_mask_for(self, slack: np.ndarray) -> np.ndarray:
+        """An alternative ``[A, W]`` lateness mask for ``serve``: a served
+        request is late when its age exceeds ``slack[a]`` (which may be
+        negative — e.g. a remote tier whose egress adder alone blows the
+        SLO makes even age-0 service late)."""
+        ages = np.arange(self.window - 1, -1, -1)
+        return ages[None, :] > np.asarray(slack, dtype=np.int64)[:, None]
+
     # -- serving ------------------------------------------------------------
-    def serve(self, tick: int, capacity: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def serve(
+        self, tick: int, capacity: np.ndarray,
+        late_mask: np.ndarray = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
         """Serve up to ``capacity[a]`` requests oldest-first.
 
         Returns ``(served[a], late[a])`` where ``late`` counts served
-        requests whose queueing age exceeded the arch's slack.
+        requests whose queueing age exceeded the arch's slack —
+        evaluated against ``late_mask`` (from :meth:`late_mask_for`)
+        instead of the arch's own slack when given, which is how capacity
+        with a per-request latency adder (a remote region's egress)
+        books its tighter lateness threshold.
         """
-        if not self.backlog:
+        if not self.backlog and late_mask is None:
             # only this tick's arrivals are queued: age 0, never late
             col = tick % self.window
             counts = self.buf[:, col]
@@ -132,7 +147,8 @@ class QueueArray:
         take = np.minimum(counts, np.clip(capacity[:, None] - before, 0.0, None))
         self.buf[:, idx] = counts - take
         served = take.sum(axis=1)
-        late = (take * self._late_mask).sum(axis=1)
+        mask = self._late_mask if late_mask is None else late_mask
+        late = (take * mask).sum(axis=1)
         self.total = self.total - served
         self.backlog = bool(self.total.any())
         return served, late

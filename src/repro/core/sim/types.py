@@ -110,10 +110,12 @@ class Variant:
 
     Multipliers are *relative to the arch's base variant* (the arch
     itself, whose multipliers are exactly 1.0): switching to this variant
-    scales the arch's per-instance service rate by ``service_mult`` and
-    its per-instance chip footprint (and therefore held-capacity cost) by
-    ``cost_mult``; answered requests deliver ``accuracy``.
-    ``cost_per_1k`` is the Fig-2 cost basis "cheapest" decisions rank by.
+    scales the arch's per-instance service rate by ``service_mult``, its
+    per-instance chip footprint (and therefore held-capacity cost) by
+    ``cost_mult``, and its batch-1 request latency — what a burst
+    invocation of the swapped pool observes — by ``lat_mult``; answered
+    requests deliver ``accuracy``.  ``cost_per_1k`` is the Fig-2 cost
+    basis "cheapest" decisions rank by.
     """
 
     arch: str
@@ -121,6 +123,7 @@ class Variant:
     service_mult: float
     cost_mult: float
     cost_per_1k: float
+    lat_mult: float = 1.0
 
 
 class VariantCatalog:
@@ -209,6 +212,11 @@ class VariantCatalog:
                         float(members[a]["chips"]) / float(base["chips"])
                     ),
                     cost_per_1k=float(members[a]["cost_per_1k"]),
+                    lat_mult=(
+                        1.0 if a == arch else
+                        float(members[a]["latency_s"])
+                        / float(base["latency_s"])
+                    ),
                 )
                 for a in ordered
             )
@@ -265,16 +273,16 @@ class VariantCatalog:
 
     def as_arrays(self, workload: List["ArchLoad"]) -> Dict[str, np.ndarray]:
         """Padded SoA view for the engine: ``accuracy`` / ``service_mult``
-        / ``cost_mult`` are ``[A, Vmax]`` (rows padded with their last
-        variant — indices are clipped to ``n_variants - 1`` so padding is
-        never addressed), plus ``n_variants`` / ``base_idx`` /
+        / ``cost_mult`` / ``lat_mult`` are ``[A, Vmax]`` (rows padded with
+        their last variant — indices are clipped to ``n_variants - 1`` so
+        padding is never addressed), plus ``n_variants`` / ``base_idx`` /
         ``floor_lo`` / ``floor_cheapest`` ``[A]`` integer vectors (the
         floor indices evaluated at each stream's ``min_accuracy``)."""
         sets = [self.per_arch[w.arch] for w in workload]
         vmax = max(len(vs) for vs in sets)
         n = len(workload)
         acc = np.empty((n, vmax)); smult = np.empty((n, vmax))
-        cmult = np.empty((n, vmax))
+        cmult = np.empty((n, vmax)); lmult = np.empty((n, vmax))
         nvar = np.empty(n, dtype=np.int64)
         base = np.empty(n, dtype=np.int64)
         lo = np.empty(n, dtype=np.int64)
@@ -283,15 +291,18 @@ class VariantCatalog:
             row_acc = [v.accuracy for v in vs]
             row_s = [v.service_mult for v in vs]
             row_c = [v.cost_mult for v in vs]
+            row_l = [v.lat_mult for v in vs]
             pad = vmax - len(vs)
             acc[i] = row_acc + [row_acc[-1]] * pad
             smult[i] = row_s + [row_s[-1]] * pad
             cmult[i] = row_c + [row_c[-1]] * pad
+            lmult[i] = row_l + [row_l[-1]] * pad
             nvar[i] = len(vs)
             base[i] = self.base_idx[w.arch]
             lo[i], cheap[i] = self.floor_indices(w.arch, w.min_accuracy)
         return {
             "accuracy": acc, "service_mult": smult, "cost_mult": cmult,
+            "lat_mult": lmult,
             "n_variants": nvar, "base_idx": base,
             "floor_lo": lo, "floor_cheapest": cheap,
         }
@@ -313,6 +324,15 @@ class ArchObs:
     n_spot: int
     throughput: float              # per-instance req/s (active variant)
     utilization: float             # served / capacity, last tick
+    # --- tier-portfolio state (defaults = the reserved-only world) --------
+    n_spot_pending: int = 0        # spot launches in flight
+    n_harvest: int = 0             # active harvest-VM instances
+    n_harvest_pending: int = 0
+    n_remote: int = 0              # active remote-region reserved instances
+    n_remote_pending: int = 0
+    spot_reclaim_risk: float = 0.0   # per-instance per-tick reclaim prob.
+    harvest_level: float = 1.0       # current harvest availability signal
+    harvest_ceiling: int = 0         # instances the provider grants at it
     # --- model-variant state (defaults = the single-variant world) -------
     active_variant: int = 0        # index into the arch's ordered variant set
     n_variants: int = 1
@@ -347,6 +367,10 @@ class Action:
     variant: int = -1              # desired variant index (-1 = hold; a
                                    # swap serves at the OLD rate for
                                    # pricing.variant_swap_s first)
+    harvest_target: int = 0        # desired harvest-VM instances (capped
+                                   # by the provider's harvest ceiling)
+    remote_target: int = 0         # desired remote-region reserved
+                                   # instances (egress adder per request)
 
 
 Policy = Callable[[int, Dict[str, ArchObs]], Dict[str, Action]]
@@ -377,6 +401,15 @@ class PoolObs:
     queue_strict: Optional[np.ndarray] = None
     queue_relaxed: Optional[np.ndarray] = None
     last_violations: Optional[np.ndarray] = None   # violations booked last tick
+    # --- tier-portfolio state, each [A] (engine always fills these) -------
+    n_spot_pending: Optional[np.ndarray] = None
+    n_harvest: Optional[np.ndarray] = None
+    n_harvest_pending: Optional[np.ndarray] = None
+    n_remote: Optional[np.ndarray] = None
+    n_remote_pending: Optional[np.ndarray] = None
+    spot_reclaim_risk: Optional[np.ndarray] = None  # per-tick reclaim prob.
+    harvest_level: Optional[np.ndarray] = None      # availability signal
+    harvest_ceiling: Optional[np.ndarray] = None    # granted instance cap
     # --- model-variant state, each [A] (engine always fills these) -------
     active_variant: Optional[np.ndarray] = None    # int index per arch
     n_variants: Optional[np.ndarray] = None
@@ -402,6 +435,8 @@ class PoolAction:
     offload: Optional[np.ndarray] = None   # defaults to all-"none"
     spot_target: Optional[np.ndarray] = None
     variant_target: Optional[np.ndarray] = None   # defaults to all-hold (-1)
+    harvest_target: Optional[np.ndarray] = None
+    remote_target: Optional[np.ndarray] = None
 
     def offload_codes(self, n: int) -> np.ndarray:
         return (np.zeros(n, dtype=np.int64)
@@ -414,6 +449,14 @@ class PoolAction:
     def variant_targets(self, n: int) -> np.ndarray:
         return (np.full(n, -1, dtype=np.int64)
                 if self.variant_target is None else self.variant_target)
+
+    def harvest_targets(self, n: int) -> np.ndarray:
+        return (np.zeros(n, dtype=np.int64)
+                if self.harvest_target is None else self.harvest_target)
+
+    def remote_targets(self, n: int) -> np.ndarray:
+        return (np.zeros(n, dtype=np.int64)
+                if self.remote_target is None else self.remote_target)
 
 
 VectorPolicy = Callable[[int, PoolObs], PoolAction]

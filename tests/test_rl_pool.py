@@ -12,16 +12,23 @@ from repro.core.rl import (
     PoolServingEnv,
     RLPoolPolicy,
     ServingEnv,
+    SPOT_MOVES,
     evaluate_pool_policy,
     save_policy_params,
     train_ppo_pool,
 )
+from repro.core.hardware import PRICING
 from repro.core.schedulers import VECTOR_SCHEDULERS
 from repro.core.sim import ArchLoad, simulate, uniform_pool_workload
 from repro.core.traces import get_trace
 from repro.core.workloads import get_scenario
 
 POOL = ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b"]
+
+#: the pre-spot-head action space: the spot head (PR 5) is hold-first
+#: (outermost factor), so indices below this decode exactly as before —
+#: the regression pins below drive this legacy subspace
+N_LEGACY = N_ACTIONS // len(SPOT_MOVES)
 
 
 @pytest.fixture(scope="module")
@@ -43,24 +50,30 @@ def test_single_arch_wrapper_reproduces_prerefactor_episode():
     The variant axis (PR 4) appended two observation features (variant
     position = 0.0 on the default single-variant catalog, accuracy
     headroom = the arch's quality over a 0.0 floor) and tripled
-    N_ACTIONS with a hold-first variant head — ``(t % N_ACTIONS) %
-    N_PROCURE == t % N_PROCURE``, so the cyclic action stream decodes to
-    the same procurement decisions and every episode total is unchanged.
+    N_ACTIONS with a hold-first variant head.  The tier portfolio
+    (PR 5) appended the spot/harvest features (spot fleet and pipeline
+    = 0.0, reclaim risk constant, harvest level = 1.0) and tripled the
+    space again with a hold-first spot head; the action stream cycles
+    the LEGACY subspace ``t % N_LEGACY`` — which PR 4's ``t %
+    N_ACTIONS`` stream decoded to — so every episode total is
+    unchanged.
     """
     trace = get_trace("twitter", 300, mean_rps=40)
     env = ServingEnv(EnvConfig(arch="qwen1.5-0.5b", mean_rps=40), trace)
     obs = env.reset()
+    risk = np.float32(min(1.0, (1.0 - np.exp(-PRICING.spot_preempt_rate)) * 600.0))
     np.testing.assert_allclose(
         obs,
         [0.1769973784685135, 0.1769973784685135, 0.20000000298023224,
          0.04424934461712837, 0.13274803757667542, 0.10000000149011612,
          0.0, 0.0, 0.0, 0.0,
-         0.0, 0.3930000066757202],
+         0.0, 0.3930000066757202,
+         0.0, 0.0, float(risk), 1.0],
         rtol=0, atol=1e-12,
     )
     total, done, t = 0.0, False, 0
     while not done:
-        obs, r, done, _ = env.step(t % N_ACTIONS)
+        obs, r, done, _ = env.step(t % N_LEGACY)
         total += r
         t += 1
     res = env.episode_result()
@@ -72,13 +85,14 @@ def test_single_arch_wrapper_reproduces_prerefactor_episode():
 
 
 def test_single_arch_wrapper_golden_with_offload():
-    """Second pin on a demanding trace that exercises burst offload."""
+    """Second pin on a demanding trace that exercises burst offload
+    (legacy action subspace — see the docstring above)."""
     trace = get_trace("berkeley", 400, mean_rps=80, seed=5)
     env = ServingEnv(EnvConfig(arch="llama3-8b", mean_rps=80), trace)
     env.reset()
     total, done, t = 0.0, False, 0
     while not done:
-        _, r, done, _ = env.step((7 * t + 3) % N_ACTIONS)
+        _, r, done, _ = env.step((7 * t + 3) % N_LEGACY)
         total += r
         t += 1
     res = env.episode_result()

@@ -1,0 +1,587 @@
+"""The tier portfolio (PR 5): the generic ResourceTier contract over
+every tier, the harvest / multi-region tiers, the burst cold-batch and
+spot in-flight-preemption bugfixes, the portfolio scheduler, and the RL
+spot head."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.hardware import PRICING
+from repro.core.schedulers import SCHEDULERS, VECTOR_SCHEDULERS
+from repro.core.sim import (
+    BurstTier,
+    HarvestVMTier,
+    Ledger,
+    MultiRegionReservedTier,
+    PoolAction,
+    ResourceTier,
+    ServingSim,
+    SpotTier,
+    simulate,
+    uniform_pool_workload,
+)
+from repro.core.workloads import get_scenario
+
+POOL = ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b"]
+
+#: every policy-targetable held-capacity tier (the contract surface)
+TIERS = {
+    "reserved": ResourceTier,
+    "spot": SpotTier,
+    "harvest": HarvestVMTier,
+    "remote": MultiRegionReservedTier,
+}
+
+
+def _mk(cls, n=3):
+    return cls(n, PRICING)
+
+
+# ---------------------------------------------------------------------------
+# The generic ResourceTier contract, parametrized over every tier.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cls", TIERS.values(), ids=TIERS.keys())
+def test_tier_pop_ready_latency_exact(cls):
+    """Launches come online exactly provision_latency_s ticks later."""
+    tier = _mk(cls)
+    lat = int(tier.provision_latency_s())
+    target = np.array([2, 0, 1])
+    tier.set_target(0, target)
+    assert (tier.active == 0).all()
+    np.testing.assert_array_equal(tier.pending_total, target)
+    for t in range(1, lat):
+        tier.set_target(t, target)
+        assert (tier.active == 0).all(), f"came online early at {t}"
+    tier.set_target(lat, target)
+    np.testing.assert_array_equal(tier.active, target)
+    assert (tier.pending_total == 0).all()
+
+
+@pytest.mark.parametrize("cls", TIERS.values(), ids=TIERS.keys())
+def test_tier_cancel_newest_ordering(cls):
+    """A shrink cancels the NEWEST in-flight launches first: the oldest
+    batch still arrives on schedule."""
+    tier = _mk(cls)
+    lat = int(tier.provision_latency_s())
+    tier.set_target(0, np.array([3, 0, 0]))       # batch 1: ready at lat
+    tier.set_target(2, np.array([5, 0, 0]))       # batch 2 (+2): ready at lat+2
+    tier.set_target(3, np.array([3, 0, 0]))       # cancels batch 2 only
+    assert tier.pending_total[0] == 3
+    tier.set_target(lat, np.array([3, 0, 0]))
+    assert tier.active[0] == 3                    # batch 1 arrived intact
+    tier.set_target(lat + 2, np.array([3, 0, 0]))
+    assert tier.active[0] == 3                    # batch 2 never does
+
+
+@pytest.mark.parametrize("cls", TIERS.values(), ids=TIERS.keys())
+def test_tier_grow_shrink_idempotent(cls):
+    """Re-applying the same target tick after tick launches nothing new
+    (in-flight counts toward the target); shrinking below active
+    releases immediately and never goes negative."""
+    tier = _mk(cls)
+    lat = int(tier.provision_latency_s())
+    target = np.array([4, 1, 2])
+    tier.set_target(0, target)
+    np.testing.assert_array_equal(tier.pending_total, target)
+    for t in range(1, lat + 1):
+        tier.set_target(t, target)
+        np.testing.assert_array_equal(
+            tier.active + tier.pending_total, target
+        )
+    np.testing.assert_array_equal(tier.active, target)
+    tier.set_target(lat + 1, target)              # steady state: no-op
+    np.testing.assert_array_equal(tier.active, target)
+    assert (tier.pending_total == 0).all()
+    tier.set_target(lat + 2, np.array([1, 0, 2]))
+    np.testing.assert_array_equal(tier.active, [1, 0, 2])
+    tier.set_target(lat + 3, np.zeros(3, dtype=np.int64))
+    assert (tier.active == 0).all()
+
+
+@pytest.mark.parametrize("cls", TIERS.values(), ids=TIERS.keys())
+def test_tier_billing_is_active_x_chips_x_price(cls):
+    """Every tick, account() posts active x chips x price_per_chip_s
+    into the ledger under the tier's name."""
+    tier = _mk(cls)
+    tier.active = np.array([2, 0, 3])
+    chips = np.array([1.0, 2.0, 4.0])
+    led = Ledger()
+    for _ in range(5):
+        chip_s = tier.account(led, chips)
+    np.testing.assert_array_equal(chip_s, tier.active * chips)
+    expected = 5 * float((tier.active * chips).sum()) * tier.price_per_chip_s()
+    res = led.res
+    posted = {
+        "reserved": res.cost_reserved, "spot": res.cost_spot,
+        "harvest": res.cost_other.get("harvest", 0.0),
+        "remote": res.cost_other.get("remote", 0.0),
+    }[tier.name]
+    assert posted == pytest.approx(expected, rel=1e-12)
+    assert res.cost_total == pytest.approx(expected, rel=1e-12)
+
+
+def test_tier_prices_are_ordered():
+    """The portfolio's price ladder: harvest < spot < remote < reserved."""
+    tiers = {name: _mk(cls) for name, cls in TIERS.items()}
+    p = {n: t.price_per_chip_s() for n, t in tiers.items()}
+    assert p["harvest"] < p["spot"] < p["remote"] < p["reserved"]
+    assert tiers["remote"].egress_latency_s() > 0
+    for n in ("reserved", "spot", "harvest"):
+        assert tiers[n].egress_latency_s() == 0
+
+
+# ---------------------------------------------------------------------------
+# Spot: in-flight launches are NOT immune to reclaim waves.
+# ---------------------------------------------------------------------------
+def test_spot_pipeline_not_immune_to_preemption():
+    """With a certain-reclaim rate, capacity parked in the provisioning
+    pipeline dies there: a policy cannot hide instances from a reclaim
+    wave by keeping them perpetually in flight."""
+    pricing = dataclasses.replace(PRICING, spot_preempt_rate=float("inf"))
+    tier = SpotTier(2, pricing)
+    assert tier.reclaim_probability() == 1.0
+    rng = np.random.default_rng(0)
+    led = Ledger()
+    target = np.array([3, 2])
+    tier.set_target(0, target)
+    for t in range(1, 20):
+        tier.begin_tick(t, rng, led)
+        assert (tier.pipeline.total == 0).all()   # the wave got them all
+        tier.set_target(t, target)                # relaunch...
+    assert (tier.active == 0).all()               # ...nothing ever lands
+    assert led.res.preemptions == 19 * int(target.sum())
+
+
+def test_spot_pipeline_reclaim_probabilistic_and_ledgered():
+    """At an intermediate rate both active instances and in-flight
+    launches are reclaimed, and every loss is ledgered."""
+    pricing = dataclasses.replace(PRICING, spot_preempt_rate=0.05,
+                                  spot_provision_s=10)
+    tier = SpotTier(4, pricing)
+    rng = np.random.default_rng(7)
+    led = Ledger()
+    target = np.full(4, 50, dtype=np.int64)
+    held = 0
+    for t in range(200):
+        tier.begin_tick(t, rng, led)
+        tier.set_target(t, target)
+        held = int(tier.active.sum())
+        assert (tier.active >= 0).all() and (tier.pipeline.buf >= 0).all()
+        total = tier.pipeline.total
+        np.testing.assert_array_equal(total, tier.pipeline.buf.sum(axis=1))
+    assert led.res.preemptions > 0
+    assert held < 200                              # churn keeps it below target
+
+
+# ---------------------------------------------------------------------------
+# Harvest: pool-correlated eviction under the availability signal.
+# ---------------------------------------------------------------------------
+def test_harvest_eviction_is_correlated_and_ledgered():
+    tier = HarvestVMTier(3, PRICING, seed=1)
+    tier._advance = lambda: None                  # pin the signal
+    tier.level = 1.0
+    cap = PRICING.harvest_cap_per_arch
+    rng = np.random.default_rng(0)
+    led = Ledger()
+    target = np.full(3, cap, dtype=np.int64)
+    lat = int(tier.provision_latency_s())
+    for t in range(lat + 1):
+        tier.begin_tick(t, rng, led)
+        tier.set_target(t, target)
+    np.testing.assert_array_equal(tier.active, target)
+    assert led.res.preemptions == 0
+    # the signal sags: every arch is clipped to the SAME new ceiling in
+    # the same tick (one correlated wave, not i.i.d. draws)
+    tier.level = 0.5
+    tier.begin_tick(lat + 1, rng, led)
+    ceiling = int(0.5 * cap)
+    np.testing.assert_array_equal(tier.active, np.full(3, ceiling))
+    assert led.res.preemptions == 3 * (cap - ceiling)
+
+
+def test_harvest_ceiling_caps_grants_and_inflight():
+    """Requests above the harvested ceiling are never granted, and a
+    ceiling drop also flushes the in-flight overflow."""
+    tier = HarvestVMTier(2, PRICING, seed=1)
+    tier._advance = lambda: None
+    tier.level = 1.0
+    cap = PRICING.harvest_cap_per_arch
+    rng = np.random.default_rng(0)
+    led = Ledger()
+    want = np.full(2, 10 * cap, dtype=np.int64)
+    tier.set_target(0, want)
+    np.testing.assert_array_equal(tier.pending_total, np.full(2, cap))
+    tier.level = 0.25
+    tier.begin_tick(1, rng, led)
+    assert (tier.pending_total <= tier.ceiling()).all()
+    assert led.res.preemptions == 0               # cancelled, never ran
+    lat = int(tier.provision_latency_s())
+    for t in range(1, lat + 2):
+        tier.begin_tick(t, rng, led) if t > 1 else None
+        tier.set_target(t, want)
+    assert (tier.active <= tier.ceiling()).all()
+
+
+def test_harvest_signal_advances_while_idle():
+    """The availability signal is provider-side state: it must evolve
+    with TIME, not with usage — the trajectory a policy observes cannot
+    depend on whether it (or any other policy) held harvest capacity."""
+    wl = uniform_pool_workload(POOL[:2], strict_frac=0.25)
+    arr = np.full((2, 120), 10.0)
+    idle = PoolAction(target=np.array([1, 1]))
+    sim = ServingSim(arr, wl)                      # never touches harvest
+    levels = []
+    while not sim.done:
+        obs = sim.observe_pool()
+        levels.append(float(obs.harvest_level[0]))
+        sim.apply_pool(idle)
+    assert len(set(levels)) > 10                   # it moves every tick
+    # and the trajectory is the same whether or not harvest was used
+    sim2 = ServingSim(arr, wl)
+    grow = PoolAction(target=np.array([1, 1]),
+                      harvest_target=np.array([2, 2]))
+    levels2 = []
+    while not sim2.done:
+        obs = sim2.observe_pool()
+        levels2.append(float(obs.harvest_level[0]))
+        sim2.apply_pool(grow)
+    assert levels2 == levels
+
+
+def test_harvest_obs_tracks_signal_when_idle():
+    """After the harvest tier drains to idle, observations must keep
+    reporting the signal's current level and ceiling — not init-time
+    statics — or a reactivating policy over-bets on phantom harvest
+    capacity."""
+    wl = uniform_pool_workload(POOL[:2], strict_frac=0.25)
+    arr = np.full((2, 400), 20.0)
+    sim = ServingSim(arr, wl)
+    sim.harvest._advance = lambda: None            # pin the signal
+    grow = PoolAction(target=np.array([1, 1]),
+                      harvest_target=np.array([2, 2]))
+    idle = PoolAction(target=np.array([1, 1]))
+    sim.observe_pool()
+    sim.apply_pool(grow)                           # tier goes live
+    sim.harvest.level = 0.5                        # availability sagged...
+    sim.observe_pool()
+    sim.apply_pool(idle)                           # ...and the policy lets
+    while sim.harvest.active.any() or sim.harvest.pipeline.total.any():
+        sim.observe_pool()                         # the fleet drain out
+        sim.apply_pool(idle)
+    obs = sim.observe_pool()
+    sim.apply_pool(idle)
+    assert not sim._tier_live["harvest"]
+    np.testing.assert_allclose(obs.harvest_level, 0.5)
+    np.testing.assert_array_equal(
+        obs.harvest_ceiling,
+        int(0.5 * PRICING.harvest_cap_per_arch),
+    )
+
+
+def test_harvest_signal_is_seeded_and_bounded():
+    a = HarvestVMTier(1, PRICING, seed=9)
+    b = HarvestVMTier(1, PRICING, seed=9)
+    c = HarvestVMTier(1, PRICING, seed=10)
+    la, lb, lc = [], [], []
+    for _ in range(500):
+        a._advance(); b._advance(); c._advance()
+        la.append(a.level); lb.append(b.level); lc.append(c.level)
+    assert la == lb                               # same seed, same signal
+    assert la != lc
+    assert min(la) >= HarvestVMTier.LEVEL_MIN and max(la) <= 1.0
+    assert np.std(la) > 0.01                      # it actually moves
+
+
+# ---------------------------------------------------------------------------
+# Burst: only the pool-warming first invocation of a cold batch pays
+# the cold start (satellite bugfix regression).
+# ---------------------------------------------------------------------------
+def _mk_burst(prewarm=False):
+    # warm latency (spinup 1 + lat_b1 0.5 = 1.5) meets the 2 s strict
+    # SLO; the cold start (+30) blows it
+    return BurstTier(
+        PRICING,
+        lat_b1=np.array([0.5, 0.5]),
+        cold_start_s=np.array([30.0, 30.0]),
+        cost_per_request=np.array([1e-4, 1e-4]),
+        prewarm=prewarm,
+    )
+
+
+def test_burst_cold_batch_violates_exactly_once():
+    burst = _mk_burst(prewarm=False)
+    led = Ledger()
+    viol = burst.offload(1000, np.array([7.0, 0.0]), 2.0, True, led)
+    # the first invocation warmed the pool; the other 6 rode it warm
+    np.testing.assert_allclose(viol, [1.0, 0.0])
+    assert led.res.violations == 1.0
+    assert led.res.violations_strict == 1.0
+    assert led.res.served_burst == 7.0
+    # same tick, the pool is warm for the next batch of the same arch
+    viol2 = burst.offload(1000, np.array([4.0, 0.0]), 2.0, True, led)
+    np.testing.assert_allclose(viol2, [0.0, 0.0])
+    assert led.res.violations == 1.0
+
+
+def test_burst_cold_subunit_mass_and_warm_batches():
+    burst = _mk_burst(prewarm=False)
+    led = Ledger()
+    # a fluid sub-unit cold batch cannot violate more than its own mass
+    viol = burst.offload(50, np.array([0.25, 0.0]), 2.0, False, led)
+    np.testing.assert_allclose(viol, [0.25, 0.0])
+    assert led.res.violations_strict == 0.0
+    # a warm batch (within the idle timeout) violates nothing
+    viol = burst.offload(51, np.array([9.0, 0.0]), 2.0, False, led)
+    np.testing.assert_allclose(viol, [0.0, 0.0])
+    # ...but the second arch's pool is still cold
+    viol = burst.offload(51, np.array([0.0, 3.0]), 2.0, False, led)
+    np.testing.assert_allclose(viol, [0.0, 1.0])
+
+
+def test_burst_warm_latency_over_slo_still_violates_whole_batch():
+    """When even the WARM path misses the SLO, the whole batch is late —
+    the fix only exempts warm followers, not slow models."""
+    burst = BurstTier(
+        PRICING,
+        lat_b1=np.array([5.0]),                    # warm 6.0 > slo 2.0
+        cold_start_s=np.array([30.0]),
+        cost_per_request=np.array([1e-4]),
+        prewarm=True,
+    )
+    led = Ledger()
+    viol = burst.offload(0, np.array([8.0]), 2.0, True, led)
+    np.testing.assert_allclose(viol, [8.0])
+
+
+# ---------------------------------------------------------------------------
+# Burst follows the active variant (satellite bugfix: variant-aware
+# burst latency on swap completion).
+# ---------------------------------------------------------------------------
+def test_burst_latency_refreshed_on_swap_completion():
+    from repro.core.sim import VariantCatalog
+
+    wl = uniform_pool_workload(POOL, strict_frac=0.25)
+    catalog = VariantCatalog.for_workload(wl)
+    arr = np.full((len(POOL), 200), 5.0)
+    sim = ServingSim(arr, wl, catalog=catalog)
+    base_lat = sim.burst.lat_b1.copy()
+    np.testing.assert_array_equal(base_lat, sim.lat_b1)   # base = itself
+    base_var = sim.swap.current.copy()
+    target = np.where(base_var + 1 < sim.var_n, base_var + 1,
+                      base_var - 1).astype(np.int64)
+    sim.observe_pool()
+    sim.apply_pool(PoolAction(target=np.ones(len(POOL), dtype=np.int64),
+                              variant_target=target))
+    hold = PoolAction(target=np.ones(len(POOL), dtype=np.int64))
+    for _ in range(int(sim.pricing.variant_swap_s)):
+        # the reload has not landed: burst still serves the OLD weights
+        np.testing.assert_array_equal(sim.burst.lat_b1, base_lat)
+        sim.observe_pool()
+        sim.apply_pool(hold)
+    # swap landed: burst latency now tracks the active variant's batch-1
+    lmult = np.take_along_axis(sim.var_lmult, sim.swap.current[:, None], 1)[:, 0]
+    np.testing.assert_allclose(sim.burst.lat_b1, sim.lat_b1 * lmult)
+    assert (sim.burst.lat_b1 != base_lat).any()
+    # ...while queue slack geometry stays pinned to the base variant
+    np.testing.assert_array_equal(
+        sim.q_strict.slack,
+        np.maximum(0, (2.0 - sim.lat_b1).astype(np.int64)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-region tier through the engine: strict prefers local.
+# ---------------------------------------------------------------------------
+def _drive(sim, action):
+    while not sim.done:
+        sim.observe_pool()
+        sim.apply_pool(action)
+    return sim.res
+
+
+def test_remote_serves_but_strict_prefers_local():
+    """With local capacity sized for the strict class and remote for the
+    rest, strict traffic never pays the egress adder — zero strict
+    violations even when egress alone would blow the strict SLO."""
+    pricing = dataclasses.replace(PRICING, remote_egress_s=3.0)  # > strict slo
+    wl = uniform_pool_workload(["llama3-8b"], strict_frac=0.5)
+    arr = np.full((1, 900), 150.0)
+    sim = ServingSim(arr, wl, pricing=pricing)
+    res = _drive(sim, PoolAction(
+        target=np.array([1]),                     # local: 104 rps > strict 75
+        remote_target=np.array([1]),              # remote absorbs the rest
+    ))
+    assert res.violations_strict == 0.0
+    assert res.cost_other["remote"] > 0.0
+    assert sim.remote.active[0] == 1
+    # the pool conserves: everything arrived was served or swept late
+    counts = sim.per_arch_counts()
+    accounted = (counts["served_vm"] + counts["served_burst"]
+                 + counts["dropped"] + counts["expired_end"] + counts["queued"])
+    np.testing.assert_allclose(counts["arrived"], accounted, atol=1e-6)
+
+
+def test_remote_egress_makes_remote_served_strict_late():
+    """Strict mass that can only be served remotely books the egress
+    adder: with egress > strict SLO it is late even served at age 0."""
+    pricing = dataclasses.replace(PRICING, remote_egress_s=3.0)
+    wl = uniform_pool_workload(["llama3-8b"], strict_frac=0.5)
+    arr = np.full((1, 900), 150.0)
+    sim = ServingSim(arr, wl, pricing=pricing, warm_start=False)
+    res = _drive(sim, PoolAction(
+        target=np.array([0]),                     # no local capacity at all
+        remote_target=np.array([2]),
+    ))
+    late = sim.violations_arch[0]
+    # EVERY strict request is late: dropped while the remote pipeline
+    # provisions, then served remotely with egress > SLO forever after
+    assert res.violations_strict == pytest.approx(900 * 75.0)
+    # with the default (sub-SLO) egress only the provisioning window's
+    # drops violate; remote-served strict traffic at age 0 is on time
+    sim2 = ServingSim(arr, wl, warm_start=False)
+    res2 = _drive(sim2, PoolAction(
+        target=np.array([0]), remote_target=np.array([2]),
+    ))
+    assert res2.violations_strict < res.violations_strict * 0.5
+    assert late >= res.violations_strict
+
+
+# ---------------------------------------------------------------------------
+# The portfolio scheduler.
+# ---------------------------------------------------------------------------
+def test_portfolio_dict_vector_parity_and_tier_mix():
+    wl = uniform_pool_workload(POOL, strict_frac=0.25)
+    arr = get_scenario("mmpp_bursts").build(len(POOL), duration_s=500,
+                                            mean_rps=300)
+    d = simulate(arr, wl, SCHEDULERS["portfolio"]()).summary()
+    v = simulate(arr, wl, VECTOR_SCHEDULERS["portfolio"]()).summary()
+    assert d == v
+    assert d["cost_harvest"] > 0                  # the portfolio actually
+    assert d["cost_reserved"] > 0                 # spreads across tiers
+
+
+def test_portfolio_per_arch_flow_conservation():
+    wl = uniform_pool_workload(POOL, strict_frac=0.25)
+    arr = get_scenario("flash_anti").build(len(POOL), duration_s=400,
+                                           mean_rps=240)
+    sim = ServingSim(arr, wl)
+    pol = VECTOR_SCHEDULERS["portfolio"]()
+    while not sim.done:
+        sim.apply_pool(pol(sim.tick, sim.observe_pool()))
+        counts = sim.per_arch_counts()
+        accounted = (
+            counts["served_vm"] + counts["served_burst"] + counts["dropped"]
+            + counts["expired_end"] + counts["queued"]
+        )
+        np.testing.assert_allclose(counts["arrived"], accounted, atol=1e-6)
+    assert sim.res.cost_total > 0
+
+
+def test_portfolio_cheaper_than_reserved_only_at_fleet_scale():
+    """The headline: splitting the base load across the discounted tiers
+    undercuts all-reserved reactive provisioning at equal-or-better
+    violations on a fleet-scale steady load."""
+    wl = uniform_pool_workload(["llama3-8b", "minicpm-2b"], strict_frac=0.25)
+    arr = np.full((2, 1200), 300.0)
+    portfolio = simulate(arr, wl, VECTOR_SCHEDULERS["portfolio"]())
+    reactive = simulate(arr, wl, VECTOR_SCHEDULERS["reactive"]())
+    assert portfolio.cost_total < reactive.cost_total
+    assert portfolio.violations_strict <= reactive.violations_strict
+    # decomposition: per-tier costs sum to the ledger total
+    s = portfolio.summary()
+    parts = (s["cost_reserved"] + s["cost_spot"] + s["cost_burst"]
+             + s.get("cost_harvest", 0.0) + s.get("cost_remote", 0.0))
+    assert parts == pytest.approx(s["cost_total"], abs=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# The RL spot head.
+# ---------------------------------------------------------------------------
+def test_procurement_action_spot_head():
+    from repro.core.rl.obs import (
+        N_PROCURE,
+        N_VARIANT_SPACE,
+        procurement_action,
+    )
+
+    wl = uniform_pool_workload(POOL, strict_frac=0.25)
+    arr = np.full((len(POOL), 10), 5.0)
+    sim = ServingSim(arr, wl)
+    obs = sim.observe_pool()
+    n = len(POOL)
+    # hold-first: every pre-spot action index decodes spot_target == 0
+    # and the reserved sizing is exactly the legacy rule
+    legacy = np.maximum(1, np.ceil(
+        0.85 * (obs.ewma_rate + (obs.queue_strict + obs.queue_relaxed) / 5.0)
+        / obs.throughput
+    )).astype(np.int64)
+    for a in (0, N_PROCURE, N_VARIANT_SPACE - 1):
+        act = procurement_action(obs, np.full(n, a))
+        assert (act.spot_target == 0).all()
+    np.testing.assert_array_equal(
+        procurement_action(obs, np.zeros(n, dtype=np.int64)).target, legacy
+    )
+    # grow steps the fleet by one; shrink clips at zero
+    grow = procurement_action(obs, np.full(n, N_VARIANT_SPACE))
+    np.testing.assert_array_equal(grow.spot_target, np.ones(n))
+    shrink = procurement_action(obs, np.full(n, 2 * N_VARIANT_SPACE))
+    np.testing.assert_array_equal(shrink.spot_target, np.zeros(n))
+    # spot capacity offsets the reserved sizing (floor at 1 instance)
+    assert (grow.target <= procurement_action(
+        obs, np.zeros(n, dtype=np.int64)).target).all()
+
+
+def test_spot_head_holds_and_drains_through_engine():
+    """Driving grow for a while then hold: the engine fleet follows, and
+    hold keeps (not drops) the in-flight fleet."""
+    from repro.core.rl.obs import N_VARIANT_SPACE, procurement_action
+
+    wl = uniform_pool_workload(POOL[:2], strict_frac=0.25)
+    arr = np.full((2, 300), 40.0)
+    sim = ServingSim(arr, wl)
+    grow = np.full(2, N_VARIANT_SPACE)            # smove = grow, proc 0
+    hold = np.zeros(2, dtype=np.int64)
+    for _ in range(10):
+        obs = sim.observe_pool()
+        sim.apply_pool(procurement_action(obs, grow))
+    obs = sim.observe_pool()
+    in_flight = obs.n_spot + obs.n_spot_pending
+    np.testing.assert_array_equal(in_flight, np.full(2, 10))
+    sim.apply_pool(procurement_action(obs, hold))
+    obs = sim.observe_pool()
+    np.testing.assert_array_equal(obs.n_spot + obs.n_spot_pending,
+                                  np.full(2, 10))
+    # reward attribution: held spot capacity costs money per arch
+    m = sim.apply_pool(procurement_action(obs, hold))
+    while not sim.done:
+        obs = sim.observe_pool()
+        m = sim.apply_pool(procurement_action(obs, hold))
+        if (obs.n_spot > 0).any():
+            break
+    assert (m["cost_arch"] > 0).all()
+
+
+def test_pool_features_spot_state():
+    from repro.core.rl.obs import OBS_DIM, RISK_SCALE, pool_features
+
+    wl = uniform_pool_workload(POOL, strict_frac=0.25)
+    arr = np.full((len(POOL), 10), 5.0)
+    sim = ServingSim(arr, wl)
+    obs = sim.observe_pool()
+    f = pool_features(obs, obs.rate, rate_scale=100.0, fleet_scale=10.0)
+    assert f.shape == (len(POOL), OBS_DIM)
+    np.testing.assert_allclose(f[:, 12], 0.0)     # no spot fleet yet
+    np.testing.assert_allclose(f[:, 13], 0.0)
+    np.testing.assert_allclose(
+        f[:, 14],
+        np.float32(min(1.0, sim.spot.reclaim_probability() * RISK_SCALE)),
+    )
+    np.testing.assert_allclose(f[:, 15], 1.0)     # full harvest signal
+
+
+def test_pool_action_tier_defaults():
+    a = PoolAction(target=np.array([1, 2]))
+    assert (a.harvest_targets(2) == 0).all()
+    assert (a.remote_targets(2) == 0).all()

@@ -310,7 +310,13 @@ def test_dict_action_variant_field(catalog):
 # RL: the variant head.
 # ---------------------------------------------------------------------------
 def test_procurement_action_variant_head(catalog):
-    from repro.core.rl import N_PROCURE, N_ACTIONS, procurement_action
+    from repro.core.rl import (
+        N_PROCURE,
+        N_ACTIONS,
+        SPOT_MOVES,
+        VARIANT_MOVES,
+        procurement_action,
+    )
 
     wl = _workload()
     arr = np.full((len(POOL), 10), 5.0)
@@ -321,7 +327,7 @@ def test_procurement_action_variant_head(catalog):
     for a in range(N_PROCURE):
         act = procurement_action(obs, np.full(n, a))
         assert (act.variant_target == -1).all()
-    assert N_ACTIONS == 3 * N_PROCURE
+    assert N_ACTIONS == len(SPOT_MOVES) * len(VARIANT_MOVES) * N_PROCURE
     # down / up step from the base index, clipped to the variant range
     down = procurement_action(obs, np.full(n, N_PROCURE))
     up = procurement_action(obs, np.full(n, 2 * N_PROCURE))

@@ -282,3 +282,33 @@ class PoolLoadMonitor:
         if self.filled < self.window_s // 4:
             return np.zeros(self.buf.shape[0], dtype=bool)
         return self.peak_to_median >= threshold
+
+
+def pool_stats_trajectory(
+    arrivals: np.ndarray, *, window_s: int = LoadMonitor.window_s,
+    ewma_alpha: float = LoadMonitor.ewma_alpha,
+) -> tuple:
+    """Functional form of the monitor: the full per-tick statistics
+    trajectory for a known ``[A, T]`` arrival matrix.
+
+    The monitor's outputs are a pure function of the arrival stream —
+    independent of policy and fleet state — so the batched JAX engine
+    (``sim/jax_engine.py``) materializes them up front and feeds them
+    into ``lax.scan`` as inputs instead of carrying the order-statistic
+    machinery as traced state.  Returns ``(ewma, peak, p2m)``, each
+    ``[T, A]``, bit-identical to calling ``observe``/``stats`` tick by
+    tick (it *is* that loop, run against the streaming monitor).
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    n_archs, ticks = arrivals.shape
+    mon = PoolLoadMonitor(n_archs, window_s=window_s, ewma_alpha=ewma_alpha)
+    ewma = np.empty((ticks, n_archs), dtype=np.float64)
+    peak = np.empty((ticks, n_archs), dtype=np.float64)
+    p2m = np.empty((ticks, n_archs), dtype=np.float64)
+    for t in range(ticks):
+        mon.observe(arrivals[:, t])
+        e, pk, _, pm = mon.stats()
+        ewma[t] = e
+        peak[t] = pk
+        p2m[t] = pm
+    return ewma, peak, p2m

@@ -141,8 +141,14 @@ class PoolServingEnv:
             tr = self._sample_arrivals()
         else:
             tr = self.base_arrivals
+        # per-episode sim seed: tier-internal draws (spot reclaims, the
+        # harvest signal) are a pure function of (seed, tick), so a
+        # fixed seed would replay the *same* stochastic realization
+        # every episode and the policy would overfit to it; scenario
+        # training advances the seed with the episode counter (fixed-
+        # arrival envs keep seed 0 — eval stays reproducible)
         self.sim = ServingSim(tr, self.workload, pricing=self.cfg.pricing,
-                              catalog=self.catalog)
+                              catalog=self.catalog, seed=self._episode)
         return self._observe(first=True)
 
     def _observe(self, first: bool = False) -> np.ndarray:

@@ -24,8 +24,13 @@ heads are hold-first, so the ``N_PROCURE`` legacy actions ``0 .. 11``
 (and the pre-spot actions ``0 .. 35``) decode exactly as the earlier
 spaces did.
 
-Everything here is NumPy-only (no JAX): the scheduler registered in
-``VECTOR_SCHEDULERS`` runs inside the engine's hot tick loop.
+Everything here defaults to NumPy (the scheduler registered in
+``VECTOR_SCHEDULERS`` runs inside the engine's hot tick loop and must
+not pay a JAX import), but the feature build and the action decode also
+come in backend-parametric ``*_arrays`` forms (``xp`` = ``numpy`` or
+``jax.numpy``) so the batched engine (``sim/jax_engine.py``) and the
+jitted rollout collector trace the *same expressions* inside
+``lax.scan`` — no jax import happens here; the backend is passed in.
 """
 from __future__ import annotations
 
@@ -94,6 +99,49 @@ def pool_features(obs: PoolObs, prev_rate: np.ndarray, *,
     return f
 
 
+def pool_features_arrays(o, prev_rate, *, rate_scale: float,
+                         fleet_scale: float, xp=np):
+    """Backend-parametric twin of :func:`pool_features`.
+
+    ``o`` maps :class:`PoolObs` field names to ``[A]`` arrays (every
+    field materialized per arch — scalars like ``spot_reclaim_risk``
+    broadcast by the caller).  Column order and scaling are pinned to
+    :func:`pool_features`; ``tests/test_jax_engine.py`` asserts the two
+    builds agree elementwise.
+    """
+    rs, fs = rate_scale, fleet_scale
+    cols = [
+        o["rate"] / rs,
+        o["ewma_rate"] / rs,
+        xp.minimum(o["peak_to_median"], 5.0) / 5.0,
+        o["queue_strict"] / rs,
+        o["queue_relaxed"] / rs,
+        o["n_active"] / fs,
+        o["n_pending"] / fs,
+        xp.minimum(o["utilization"], 2.0) / 2.0,
+        (o["rate"] - prev_rate) / rs,
+        o["last_violations"] / rs,
+        o["active_variant"] / xp.maximum(o["n_variants"] - 1, 1),
+        xp.clip(o["accuracy"] - o["accuracy_floor"], 0.0, 1.0),
+        o["n_spot"] / fs,
+        o["n_spot_pending"] / fs,
+        xp.minimum(o["spot_reclaim_risk"] * RISK_SCALE, 1.0),
+        o["harvest_level"],
+    ]
+    return xp.stack(cols, axis=1).astype(xp.float32)
+
+
+def decode_actions_arrays(actions, xp=np) -> tuple:
+    """Backend-parametric core of :func:`decode_actions` (``actions``
+    already an integer array of the backend's kind)."""
+    smove = xp.asarray(_SMOVE_DELTA)[actions // N_VARIANT_SPACE]
+    rest = actions % N_VARIANT_SPACE
+    proc = rest % N_PROCURE
+    vmove = xp.asarray(_VMOVE_DELTA)[rest // N_PROCURE]
+    headroom = xp.asarray(_HEADROOM_ARR)[proc // len(OFFLOADS)]
+    return headroom, proc % len(OFFLOADS), vmove, smove
+
+
 def decode_actions(actions: np.ndarray) -> tuple:
     """Split per-arch discrete actions into ``(headroom[A], offload[A],
     vmove[A], smove[A])``.
@@ -103,12 +151,7 @@ def decode_actions(actions: np.ndarray) -> tuple:
     variant step and ``smove`` the signed spot-fleet step, both in
     ``{-1, 0, +1}``.
     """
-    actions = np.asarray(actions, dtype=np.int64)
-    smove = _SMOVE_DELTA[actions // N_VARIANT_SPACE]
-    rest = actions % N_VARIANT_SPACE
-    proc = rest % N_PROCURE
-    vmove = _VMOVE_DELTA[rest // N_PROCURE]
-    return _HEADROOM_ARR[proc // len(OFFLOADS)], proc % len(OFFLOADS), vmove, smove
+    return decode_actions_arrays(np.asarray(actions, dtype=np.int64))
 
 
 def variant_targets(obs: PoolObs, vmove: np.ndarray) -> np.ndarray:
@@ -138,6 +181,22 @@ def spot_targets(obs: PoolObs, smove: np.ndarray) -> np.ndarray:
     return np.maximum(keep + smove, 0).astype(np.int64)
 
 
+def procurement_targets_arrays(actions, *, ewma_rate, queue_strict,
+                               queue_relaxed, throughput, n_spot,
+                               n_spot_pending, xp=np) -> tuple:
+    """Backend-parametric procurement decode: factored actions -> the
+    ``(target, offload, spot, vmove)`` arrays behind
+    :func:`procurement_action` (the variant step comes back raw — variant
+    clipping needs the catalog fields the caller holds)."""
+    headroom, offload, vmove, smove = decode_actions_arrays(actions, xp=xp)
+    spot = xp.maximum(n_spot + n_spot_pending + smove, 0).astype(xp.int64)
+    backlog = queue_strict + queue_relaxed
+    demand = ewma_rate + backlog / BACKLOG_DRAIN_S
+    residual = headroom * demand - spot * throughput
+    target = xp.maximum(1, xp.ceil(residual / throughput)).astype(xp.int64)
+    return target, offload, spot, vmove
+
+
 def procurement_action(obs: PoolObs, actions: np.ndarray) -> PoolAction:
     """Decode factored actions into the engine's :class:`PoolAction`.
 
@@ -151,14 +210,12 @@ def procurement_action(obs: PoolObs, actions: np.ndarray) -> PoolAction:
     the ACTIVE variant's, so fleet sizing and variant choice stay
     coupled.
     """
-    headroom, offload, vmove, smove = decode_actions(actions)
-    spot = spot_targets(obs, smove)
-    backlog = obs.queue_strict + obs.queue_relaxed
-    demand = obs.ewma_rate + backlog / BACKLOG_DRAIN_S
-    residual = headroom * demand - spot * obs.throughput
-    target = np.maximum(
-        1, np.ceil(residual / obs.throughput)
-    ).astype(np.int64)
+    target, offload, spot, vmove = procurement_targets_arrays(
+        np.asarray(actions, dtype=np.int64),
+        ewma_rate=obs.ewma_rate, queue_strict=obs.queue_strict,
+        queue_relaxed=obs.queue_relaxed, throughput=obs.throughput,
+        n_spot=obs.n_spot, n_spot_pending=obs.n_spot_pending,
+    )
     return PoolAction(target=target, offload=offload,
                       spot_target=spot,
                       variant_target=variant_targets(obs, vmove))

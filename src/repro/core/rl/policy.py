@@ -42,6 +42,19 @@ DEFAULT_CHECKPOINT = os.path.join(
 _LAYERS = ("torso1", "torso2", "pi", "v")
 
 
+def policy_logits(params: dict, feats, xp=np):
+    """Two-layer tanh torso + action head, backend-parametric.
+
+    The single definition of the controller's forward pass:
+    :class:`RLPoolPolicy` runs it eagerly in NumPy, and the batched JAX
+    engine / jitted rollout collector trace it with ``xp=jax.numpy`` —
+    so deployment and training cannot drift on the math.
+    """
+    h = xp.tanh(feats @ params["torso1"]["w"] + params["torso1"]["b"])
+    h = xp.tanh(h @ params["torso2"]["w"] + params["torso2"]["b"])
+    return h @ params["pi"]["w"] + params["pi"]["b"]
+
+
 def params_to_jsonable(params: dict) -> dict:
     """JAX/NumPy param pytree -> plain nested lists (for JSON)."""
     return {
@@ -181,10 +194,7 @@ class RLPoolPolicy:
 
     # -- inference ---------------------------------------------------------
     def logits(self, feats: np.ndarray) -> np.ndarray:
-        p = self.params
-        h = np.tanh(feats @ p["torso1"]["w"] + p["torso1"]["b"])
-        h = np.tanh(h @ p["torso2"]["w"] + p["torso2"]["b"])
-        return h @ p["pi"]["w"] + p["pi"]["b"]
+        return policy_logits(self.params, feats)
 
     def _select(self, logits: np.ndarray) -> np.ndarray:
         if self.greedy:

@@ -37,6 +37,7 @@ from repro.core.rl.env import (
     PoolServingEnv,
     ServingEnv,
 )
+from repro.core.sim import jax_engine
 
 
 @dataclass(frozen=True)
@@ -153,6 +154,82 @@ def compute_gae(rewards, values, dones, last_value, gamma, lam):
 
 
 # ---------------------------------------------------------------------------
+# Batched rollout collection: one whole episode inside the jitted engine
+# scan instead of T host round-trips through env.step.
+# ---------------------------------------------------------------------------
+def collect_rollouts_jax(env: PoolServingEnv, params, key, *,
+                         arrivals=None, seed: int = 0) -> dict:
+    """Collect one full-episode ``[T, A]`` rollout in a single dispatch.
+
+    Drives the batched engine (:mod:`repro.core.sim.jax_engine`) with
+    the stochastic ``rl_sample`` policy: the net's forward pass, the
+    categorical draw and the procurement decode all run *inside*
+    ``lax.scan``, and the per-tick extras come back as exactly the
+    buffers the host rollout loop fills — observation features,
+    sampled actions, log-probs, values — plus rewards rebuilt from the
+    engine's per-arch cost/violation/accuracy attribution under the
+    env's :class:`~repro.core.rl.env.EnvConfig` weights (the end-of-
+    trace expired sweep lands on the last tick, as ``env.step`` books
+    it).  The per-tick key sequence is the host loop's own
+    ``key, k_t = split(key)`` chain, so the sampling stream is shared
+    with the step-wise collector, not merely analogous.
+
+    Arrival precedence matches ``env.reset``: an explicit ``arrivals``
+    matrix, else a fresh draw from the env's scenario pool, else the
+    fixed matrix the env was built with.  Episodes are done-terminated
+    only at the trace end, so ``dones`` is a one-hot tail and
+    ``last_value`` is irrelevant to GAE (returned as zeros).
+    """
+    cfg = env.cfg
+    if arrivals is not None:
+        tr = arrivals
+    elif env.scenarios:
+        tr = env._sample_arrivals()
+        seed = env._episode          # the per-episode sim seed env.reset uses
+    else:
+        tr = env.base_arrivals
+    tr = np.asarray(tr, dtype=np.float64)
+    A, T = tr.shape
+    pol = jax_engine.JAX_POLICIES["rl_sample"]
+    statics, state0, xs = jax_engine.build_sim_inputs(
+        tr, env.workload, pricing=cfg.pricing, seed=seed,
+        needs_stats=pol.needs_stats, needs_key=True, key=key,
+    )
+    statics["policy"] = {
+        "net": params,
+        "rate_scale": cfg.rate_scale,
+        "fleet_scale": cfg.fleet_scale,
+    }
+    from jax.experimental import enable_x64
+    with enable_x64():
+        out = jax.tree.map(
+            np.asarray,
+            jax_engine._get_runner("rl_sample", mode="stack")(
+                statics, state0, xs
+            ),
+        )
+    ys = out["ys"]
+    viol = np.array(ys["viol"], dtype=np.float64)    # owned: last tick edited
+    viol[-1] += out["expired_s"] + out["expired_r"]
+    rewards = -cfg.reward_scale * (
+        ys["cost_arch"]
+        + cfg.violation_penalty * viol
+        - cfg.accuracy_bonus * ys["acc_w"]
+    )
+    dones = np.zeros(T, dtype=np.float32)
+    dones[-1] = 1.0
+    return {
+        "obs": np.asarray(ys["obs"], dtype=np.float32),
+        "actions": np.asarray(ys["action"], dtype=np.int32),
+        "logp": np.asarray(ys["logp"], dtype=np.float32),
+        "values": np.asarray(ys["value"], dtype=np.float32),
+        "rewards": rewards.astype(np.float32),
+        "dones": dones,
+        "last_value": np.zeros(A, dtype=np.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
 # Update.
 # ---------------------------------------------------------------------------
 def _loss(params, batch, clip_eps, entropy_coef, value_coef):
@@ -209,8 +286,16 @@ def train_ppo_pool(
     cfg: PPOConfig = PPOConfig(),
     *,
     verbose: bool = False,
+    jax_rollouts: bool = False,
 ) -> PPOState:
-    """Train the pool controller with batched ``[T, A]`` rollouts."""
+    """Train the pool controller with batched ``[T, A]`` rollouts.
+
+    ``jax_rollouts=True`` swaps the step-wise env loop for
+    :func:`collect_rollouts_jax`: each iteration collects exactly one
+    full episode in a single jitted dispatch (``cfg.rollout_len`` is
+    superseded by the episode length on that path); the update math is
+    identical.
+    """
     if isinstance(env, ServingEnv):
         env = env.pool
     A = env.n_archs
@@ -227,27 +312,39 @@ def train_ppo_pool(
     best_reward, best_params = float("-inf"), params
 
     for it in range(cfg.iterations):
-        T = cfg.rollout_len
-        obs_buf = np.zeros((T, A, OBS_DIM), np.float32)
-        act_buf = np.zeros((T, A), np.int32)
-        logp_buf = np.zeros((T, A), np.float32)
-        val_buf = np.zeros((T, A), np.float32)
-        rew_buf = np.zeros((T, A), np.float32)
-        done_buf = np.zeros((T,), np.float32)
+        if jax_rollouts:
+            key, kroll = jax.random.split(key)
+            buf = collect_rollouts_jax(env, params, kroll)
+            obs_buf, act_buf = buf["obs"], buf["actions"]
+            logp_buf, val_buf = buf["logp"], buf["values"]
+            rew_buf, done_buf = buf["rewards"], buf["dones"]
+            T = rew_buf.shape[0]
+            last_v = buf["last_value"]
+            ep_rewards.append(float(rew_buf.sum()))
+        else:
+            T = cfg.rollout_len
+            obs_buf = np.zeros((T, A, OBS_DIM), np.float32)
+            act_buf = np.zeros((T, A), np.int32)
+            logp_buf = np.zeros((T, A), np.float32)
+            val_buf = np.zeros((T, A), np.float32)
+            rew_buf = np.zeros((T, A), np.float32)
+            done_buf = np.zeros((T,), np.float32)
 
-        for t in range(T):
-            key, kact = jax.random.split(key)
-            a, logp, v = pool_policy_action(params, obs, kact)
-            obs_buf[t], act_buf[t], logp_buf[t], val_buf[t] = obs, a, logp, v
-            obs, r_arch, done, _ = env.step(a)
-            rew_buf[t], done_buf[t] = r_arch, float(done)
-            ep_reward += float(r_arch.sum())
-            if done:
-                ep_rewards.append(ep_reward)
-                ep_reward = 0.0
-                obs = env.reset()
+            for t in range(T):
+                key, kact = jax.random.split(key)
+                a, logp, v = pool_policy_action(params, obs, kact)
+                obs_buf[t], act_buf[t], logp_buf[t], val_buf[t] = (
+                    obs, a, logp, v
+                )
+                obs, r_arch, done, _ = env.step(a)
+                rew_buf[t], done_buf[t] = r_arch, float(done)
+                ep_reward += float(r_arch.sum())
+                if done:
+                    ep_rewards.append(ep_reward)
+                    ep_reward = 0.0
+                    obs = env.reset()
 
-        _, last_v = policy_logits_value(params, jnp.asarray(obs))
+            _, last_v = policy_logits_value(params, jnp.asarray(obs))
         adv, rets = compute_gae_pool(
             rew_buf, val_buf, done_buf, np.asarray(last_v, np.float32),
             cfg.gamma, cfg.gae_lambda,

@@ -198,7 +198,9 @@ class ServingSim:
     ):
         arr = np.asarray(trace, dtype=np.float64)
         self.pricing = pricing
-        self.rng = np.random.default_rng(seed)   # spot preemption draws
+        # tier-protocol generator (the stochastic tiers own per-tick
+        # seeded streams instead — see sim/fleet.py)
+        self.rng = np.random.default_rng(seed)
         self.tick = 0
 
         keys = [w.key for w in workload]
@@ -268,7 +270,7 @@ class ServingSim:
         # offering registers in ``aux_tiers`` below and the generic
         # provision / serve / account loops drive it.
         self.reserved = ResourceTier(n, pricing)
-        self.spot = SpotTier(n, pricing)
+        self.spot = SpotTier(n, pricing, seed=seed)
         self.harvest = HarvestVMTier(n, pricing, seed=seed)
         self.remote = MultiRegionReservedTier(n, pricing)
         #: policy-targetable tiers beyond reserved, keyed by action field

@@ -26,6 +26,95 @@ import numpy as np
 from repro.core.hardware import FleetPricing
 from repro.core.sim.accounting import Ledger
 
+# ---------------------------------------------------------------------------
+# Explicit randomness for tier-internal events.
+#
+# The stochastic tiers (spot reclaims, the harvest signal) draw from
+# *tier-owned seeded streams whose position is a pure function of the
+# tick index*, never from shared engine RNG state.  That makes every
+# random trajectory reproducible from ``(seed, tick)`` alone, so the
+# batched JAX engine (``sim/jax_engine.py``) can precompute the exact
+# same draws host-side and stay in lockstep with this engine — reclaim
+# for reclaim — instead of only matching in distribution.
+# ---------------------------------------------------------------------------
+
+#: shared cap on the inverse-CDF walk in :func:`binomial_from_uniform`.
+#: Both the NumPy and the JAX twin stop after this many CDF terms, so the
+#: two implementations return identical counts for identical uniforms.
+#: 64 is > mean + 8 sigma for every reclaim regime the simulator uses
+#: (p = 1 - exp(-1/1800) at fleet sizes, p = 0.05 in the stress tests).
+BINOMIAL_KMAX = 64
+
+_SPOT_STREAM_TAG = 0x5907  # domain-separates the spot uniform stream
+
+
+def binomial_from_uniform(n: np.ndarray, p: float, u: np.ndarray) -> np.ndarray:
+    """Exact inverse-CDF Binomial(n, p) sample from one uniform per row.
+
+    Deterministic given ``u``: walks the CDF with the pmf recurrence
+    ``pmf(k+1) = pmf(k) * (n-k)/(k+1) * p/(1-p)`` and returns the number
+    of CDF terms <= u, capped at :data:`BINOMIAL_KMAX` (and at ``n``).
+    ``p >= 1`` returns ``n`` exactly, ``p <= 0`` returns zeros — the
+    degenerate cases the tier tests pin must not depend on float walks.
+    """
+    n = np.asarray(n, dtype=np.int64)
+    if p <= 0.0:
+        return np.zeros_like(n)
+    if p >= 1.0:
+        return n.copy()
+    u = np.asarray(u, dtype=np.float64)
+    nf = n.astype(np.float64)
+    q = 1.0 - p
+    pmf = q ** nf                       # P(X = 0)
+    cdf = pmf.copy()
+    k = (u >= cdf).astype(np.int64)
+    for j in range(1, BINOMIAL_KMAX + 1):
+        still = u >= cdf
+        if not still.any():
+            break
+        pmf = np.maximum(pmf * ((nf - (j - 1)) / j) * (p / q), 0.0)
+        cdf = cdf + pmf
+        k += (u >= cdf).astype(np.int64)
+    return np.minimum(k, n)
+
+
+def spot_uniform_stream(seed: int) -> np.random.Generator:
+    """The seeded stream behind a :class:`SpotTier`'s reclaim draws."""
+    return np.random.default_rng((_SPOT_STREAM_TAG, seed))
+
+
+def spot_reclaim_uniforms(seed: int, ticks: int, n_archs: int) -> np.ndarray:
+    """Precompute the ``[ticks, 2, n_archs]`` uniform schedule a
+    :class:`SpotTier` with this seed consumes: slot 0 drives the active
+    reclaim draw, slot 1 the in-flight (pipeline) one.  A single bulk
+    ``random()`` fill is bitwise-identical to the tier's one-draw-per-tick
+    consumption of the same stream."""
+    return spot_uniform_stream(seed).random((ticks, 2, n_archs))
+
+
+def harvest_level_trajectory(
+    seed: int, ticks: int, *, level0: float = 1.0,
+) -> np.ndarray:
+    """Precompute ``ticks`` steps of the harvest availability signal.
+
+    ``out[t]`` is the level a :class:`HarvestVMTier` with this seed holds
+    *during* engine tick ``t`` (after its per-tick advance), replayed
+    from the same seeded stream — the signal is a pure function of time,
+    so the batched engine materializes it host-side."""
+    rng = np.random.default_rng(seed + 0x9A27)
+    noise = rng.standard_normal(ticks)
+    out = np.empty(ticks, dtype=np.float64)
+    level = level0
+    for t in range(ticks):
+        level = float(np.clip(
+            level
+            + HarvestVMTier.LEVEL_KAPPA * (HarvestVMTier.LEVEL_MEAN - level)
+            + HarvestVMTier.LEVEL_SIGMA * noise[t],
+            HarvestVMTier.LEVEL_MIN, 1.0,
+        ))
+        out[t] = level
+    return out
+
 
 # ---------------------------------------------------------------------------
 # Fixed-latency provisioning pipeline, vectorized over the pool.
@@ -193,7 +282,20 @@ class ResourceTier:
 # Spot tier: cheap, preemptible (paper §VI future work, implemented).
 # ---------------------------------------------------------------------------
 class SpotTier(ResourceTier):
+    """Reclaim draws come from a tier-owned seeded uniform stream that
+    advances exactly one ``[2, A]`` block per engine tick (``begin_tick``
+    while engaged, ``idle_tick`` otherwise), so the uniforms consumed at
+    tick ``t`` are a pure function of ``(seed, t)`` — the batched JAX
+    engine precomputes the identical schedule with
+    :func:`spot_reclaim_uniforms` and reproduces reclaims exactly.  The
+    ``rng`` argument of ``begin_tick`` is part of the tier protocol but
+    unused here."""
+
     name = "spot"
+
+    def __init__(self, n_archs: int, pricing: FleetPricing, seed: int = 0):
+        super().__init__(n_archs, pricing)
+        self._u_rng = spot_uniform_stream(seed)
 
     def provision_latency_s(self) -> float:
         return self.pricing.spot_provision_s
@@ -205,23 +307,26 @@ class SpotTier(ResourceTier):
         """Per-instance per-tick reclaim probability (policy observable)."""
         return 1.0 - math.exp(-self.pricing.spot_preempt_rate)
 
+    def idle_tick(self, tick: int) -> None:
+        # keep the stream position a function of the tick, not of usage
+        self._u_rng.random((2, len(self.active)))
+
     def begin_tick(self, tick: int, rng: np.random.Generator, ledger: Ledger) -> None:
         p_reclaim = self.reclaim_probability()
+        u = self._u_rng.random((2, len(self.active)))
         if self.active.any():
-            reclaimed = rng.binomial(self.active, p_reclaim)
+            reclaimed = binomial_from_uniform(self.active, p_reclaim, u[0])
             self.active -= reclaimed
             ledger.add_preemptions(int(reclaimed.sum()))
         if self.pipeline.total.any():
             # in-flight launches are NOT immune: the provider reclaims
             # provisioning slices at the same rate, so a policy cannot
-            # hide capacity in the pipeline through a reclaim wave.
-            # Only the occupied ring columns are sampled — the buffer is
-            # [A, provision_latency] but launches cluster in a few ticks.
-            buf = self.pipeline.buf
-            cols = np.flatnonzero(buf.any(axis=0))
-            lost = rng.binomial(buf[:, cols], p_reclaim)
-            buf[:, cols] -= lost
-            self.pipeline.total -= lost.sum(axis=1)
+            # hide capacity in the pipeline through a reclaim wave.  The
+            # loss is drawn on the per-arch in-flight total and lands on
+            # the newest launches first (the ones a same-tick reprovision
+            # would re-request anyway).
+            lost = binomial_from_uniform(self.pipeline.total, p_reclaim, u[1])
+            self.pipeline.cancel_newest(tick, lost)
             ledger.add_preemptions(int(lost.sum()))
 
 

@@ -1,0 +1,1079 @@
+"""Batched pure-functional JAX twin of the tick engine.
+
+The NumPy engine (:mod:`repro.core.sim.engine`) advances one tick per
+Python call: admit -> provision -> serve -> offload -> drop -> account.
+This module re-expresses that pipeline as a pure function over one flat
+pytree of arrays (:class:`SimState`) so a whole trajectory compiles to a
+single ``jax.lax.scan`` — and, with ``jax.vmap`` over a leading batch
+axis, a whole (scenario x seed x policy-params) evaluation grid runs as
+ONE dispatch instead of B Python tick loops.
+
+Semantics are pinned to the NumPy engine, which stays the oracle
+(``tests/test_jax_engine.py`` differential-fuzzes the two over the
+scenario zoo).  Three representation changes make the port pure AND
+fast without changing results:
+
+* **Prefix-sum age buffers.**  The NumPy queues/pipelines are
+  tick-indexed ring buffers of per-age counts; here every age buffer
+  is stored as its *running prefix sum* along the age axis.  Queues
+  are oldest-first (``S[:, j]`` = total mass in the ``j+1`` oldest
+  buckets, so the last column is the queue total), pipelines
+  newest-first (``P[:, j]`` = launches in the ``j+1`` newest cohorts).
+  The payoff is that every order-dependent operation collapses to a
+  rank-1 broadcast:
+
+  - serving ``c`` oldest-first: the cumulative take through bucket
+    ``j`` is ``min(S_j, c)``, so ``S' = max(S - c, 0)`` and ``served =
+    min(S_last, c)``;
+  - SLO lateness: the late buckets are exactly the oldest ``m`` (an
+    age-contiguous prefix), so the late mass served is ``min(S[m-1],
+    c)`` — a single gather;
+  - aging is a column shift, grow / drop / drain are broadcast add /
+    subtract / row-zero, and totals are the last column.
+
+  No cumulative sum survives into the compiled tick — XLA's CPU scan
+  kernel costs several times a copy over the same elements, and the
+  naive count-space port spent most of its wall-clock there; in prefix
+  form a queue tick is a handful of fused elementwise passes.
+
+* **Cumulative-counter pipeline rings.**  Tier provisioning pipelines
+  (up to 300 ticks deep for the remote tier) would pay an O(A*L) shift
+  per tick even in prefix form, and shifting them was the ported
+  tick's dominant cost.  Instead each pipeline stores a ring of
+  *cumulative granted* counters: slot ``t mod L`` holds ``G_t``, the
+  clipped running total of instances granted through tick ``t``.  A
+  cohort launched at ``t`` matures at ``t + L``, exactly when its slot
+  comes around again, so ready = ``G_{t-L} - G_{t-L-1}`` (the slot
+  read minus last tick's), pending = ``G - G_{t-L}``, and the push is
+  a single-slot write — all O(A).  Cancelling ``c`` newest-first
+  clips the cumulative curve from the top: ``ring = min(ring, G - c)``
+  — and because every stored value is ``<= G``, the same clip is a
+  numeric no-op on cancel-free ticks, so it runs unconditionally as
+  the only O(A*L) pass a pipeline pays per tick.
+
+* **Everything-runs-every-tick.**  The NumPy engine lazily skips idle
+  tiers and empty offloads; here every tier provisions, serves and
+  accounts unconditionally — a 0-active tier contributes exact zeros,
+  so the branchless form is identical (down to summary key presence,
+  which per-tick liveness flags reconstruct).
+
+* **Host-precomputed inputs.**  Every stochastic or stream-derived
+  input is a pure function of ``(seed, tick)`` or of the arrival matrix
+  alone, so the monitor statistics
+  (:func:`~repro.core.load_monitor.pool_stats_trajectory`), the harvest
+  signal (:func:`~repro.core.sim.fleet.harvest_level_trajectory`) and
+  the spot reclaim uniforms
+  (:func:`~repro.core.sim.fleet.spot_reclaim_uniforms`) are
+  materialized host-side, bit-identical to the streams the NumPy tiers
+  consume, and fed to the scan as per-tick inputs.
+
+Everything runs under ``jax.experimental.enable_x64`` (float64, like
+the NumPy engine) without flipping the global flag — the float32 PPO
+training stack is untouched.  Policies are in-scan twins of the
+vectorized schedulers (:data:`JAX_POLICIES`); their parameters ride in
+the traced statics pytree, so a parameter sweep vmaps without
+recompiling and one trace serves every workload of the same shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import enable_x64
+
+from repro.core.hardware import PRICING, FleetPricing
+from repro.core.load_monitor import (
+    LoadMonitor,
+    pool_stats_trajectory,
+)
+from repro.core.rl.obs import (
+    pool_features_arrays,
+    procurement_targets_arrays,
+)
+from repro.core.rl.policy import (
+    load_policy_checkpoint,
+    _fallback_params,
+    policy_logits,
+)
+from repro.core.sim.engine import ServingSim
+from repro.core.sim.fleet import (
+    BINOMIAL_KMAX,
+    harvest_level_trajectory,
+    spot_reclaim_uniforms,
+)
+from repro.core.sim.types import ArchLoad
+
+__all__ = [
+    "SimState",
+    "JAX_POLICIES",
+    "binomial_from_uniform_jnp",
+    "build_sim_inputs",
+    "make_runner",
+    "run_scenario",
+    "run_grid",
+    "runner_trace_count",
+]
+
+
+# ---------------------------------------------------------------------------
+# State pytree.
+# ---------------------------------------------------------------------------
+class SimState(NamedTuple):
+    """All engine / tier / queue / monitor state for one tick, flat.
+
+    ``*_buf`` are ``[A, W]`` oldest-first queue *prefix sums* (column
+    ``j`` totals the ``j+1`` oldest age buckets; the last column is the
+    queue total).  Each tier pipeline is a cumulative-counter ring
+    (see the module docstring): ``*_ring [A, L]`` holds the clipped
+    cumulative granted count by launch slot, ``*_cum [A]`` the current
+    cumulative total and ``*_mat [A]`` the cumulative matured total.
+    """
+
+    qs_buf: Any          # [A, Ws] strict queue prefix mass (f64)
+    qr_buf: Any          # [A, Wr] relaxed queue prefix mass (f64)
+    res_active: Any      # [A]     reserved instances (i64)
+    res_ring: Any        # [A, Lr] cumulative grants by launch slot (i32)
+    res_cum: Any         # [A]     cumulative granted (i32)
+    res_mat: Any         # [A]     cumulative matured (i32)
+    spot_active: Any
+    spot_ring: Any
+    spot_cum: Any
+    spot_mat: Any
+    harv_active: Any
+    harv_ring: Any
+    harv_cum: Any
+    harv_mat: Any
+    rem_active: Any
+    rem_ring: Any
+    rem_cum: Any
+    rem_mat: Any
+    burst_last_used: Any  # [A] last tick the burst pool saw each arch
+    last_util: Any        # [A] previous tick's utilization (policy obs)
+    last_viol: Any        # [A] previous tick's violation delta
+    prev_rate: Any        # [A] previous tick's arrivals (RL trend feature)
+
+
+# ---------------------------------------------------------------------------
+# Primitive ops (exact twins of the NumPy engine's steps).
+# ---------------------------------------------------------------------------
+def binomial_from_uniform_jnp(n, p, u):
+    """Traceable twin of :func:`repro.core.sim.fleet.binomial_from_uniform`.
+
+    Identical inverse-CDF walk, identical :data:`BINOMIAL_KMAX` cap —
+    the early exit of the NumPy loop never changes the count (the
+    ``u >= cdf`` indicator is monotone in the walk), so a bounded
+    ``lax.while_loop`` reproduces it exactly.
+    """
+    n = jnp.asarray(n)
+    u = jnp.asarray(u, dtype=jnp.float64)
+    p = jnp.asarray(p, dtype=jnp.float64)
+    pc = jnp.clip(p, 1e-12, 1.0 - 1e-12)   # walk-safe; edges handled below
+    q = 1.0 - pc
+    nf = n.astype(jnp.float64)
+    pmf0 = q ** nf
+    k0 = (u >= pmf0).astype(n.dtype)
+
+    def cond(c):
+        j, _, cdf, _ = c
+        return (j <= BINOMIAL_KMAX) & (u >= cdf).any()
+
+    def body(c):
+        j, pmf, cdf, k = c
+        jf = j.astype(jnp.float64)
+        pmf = jnp.maximum(pmf * ((nf - (jf - 1.0)) / jf) * (pc / q), 0.0)
+        cdf = cdf + pmf
+        k = k + (u >= cdf).astype(n.dtype)
+        return j + 1, pmf, cdf, k
+
+    j0 = jnp.asarray(1, dtype=jnp.int64)
+    _, _, _, k = lax.while_loop(cond, body, (j0, pmf0, pmf0, k0))
+    k = jnp.minimum(k, n)
+    zero = jnp.zeros_like(n)
+    return jnp.where(p <= 0.0, zero, jnp.where(p >= 1.0, n, k))
+
+
+def _age_queue(S):
+    """One tick of queue aging: every bucket gets one tick older.  In
+    prefix form that is a left shift — the falling-off oldest bucket is
+    empty by construction (the drop step subtracted its prefix last
+    tick, zeroing column 0 exactly), so every prefix already excludes
+    it and the total (last column, duplicated) is preserved."""
+    return jnp.concatenate([S[:, 1:], S[:, -1:]], axis=1)
+
+
+def _serve(S, capacity, n_late):
+    """Oldest-first serve from a prefix queue.  ``n_late[a]`` counts how
+    many of the oldest buckets are past arch ``a``'s slack (lateness is
+    always an age-contiguous prefix, so one gather scores it).
+    Returns ``(S, served, late)``."""
+    served = jnp.minimum(S[:, -1], capacity)
+    late = jnp.minimum(_late_mass(S, n_late), capacity)
+    S = jnp.maximum(S - capacity[:, None], 0.0)
+    return S, served, late
+
+
+def _late_mass(S, n_late):
+    """Mass in the ``n_late[a]`` oldest buckets of a prefix queue (also
+    the end-of-trace expired sweep)."""
+    idx = jnp.clip(n_late - 1, 0, S.shape[1] - 1)
+    picked = jnp.take_along_axis(S, idx[:, None], axis=1)[:, 0]
+    return jnp.where(n_late > 0, picked, 0.0)
+
+
+class _Pipe(NamedTuple):
+    """A tier's cumulative-counter pipeline ring (module docstring)."""
+
+    ring: Any   # [A, L] clipped cumulative grants by launch slot (i32)
+    cum: Any    # [A]    cumulative granted, post-cancel (i32)
+    mat: Any    # [A]    cumulative matured (i32)
+
+
+def _pipe_cancel(p: _Pipe, counts):
+    """Cancel up to ``counts[a]`` in-flight launches, newest first.
+
+    Clipping the cumulative curve from the top eats the most recent
+    cohorts first; every stored slot is ``<= cum``, so on cancel-free
+    rows the clip is a numeric no-op — the op runs unconditionally."""
+    cancel = jnp.minimum(counts, p.cum - p.mat).astype(p.cum.dtype)
+    cum = p.cum - cancel
+    return _Pipe(jnp.minimum(p.ring, cum[:, None]), cum, p.mat)
+
+
+def _tier_set_target(active, p: _Pipe, target, slot):
+    """One tier tick on a pipeline ring: admit the cohort maturing at
+    this tick's slot, then grow or shrink toward ``target`` (cancel
+    in-flight newest-first before releasing active) —
+    ``ResourceTier.set_target`` branchless and O(A) except the cancel
+    clip.  ``slot`` is ``t mod L`` (a traced scalar): the slot written
+    L ticks ago (or the initial 0) is exactly the cohort maturing now,
+    and the write at the end stores this tick's cumulative total for
+    tick ``t + L``."""
+    v = lax.dynamic_slice_in_dim(p.ring, slot, 1, axis=1)[:, 0]
+    ready = (v - p.mat).astype(active.dtype)
+    active = active + ready
+    pending = (p.cum - v).astype(active.dtype)
+    in_flight = active + pending
+    grow = jnp.maximum(target - in_flight, 0)
+    shrink = in_flight - target
+    cancel = jnp.where(shrink > 0, jnp.minimum(pending, shrink), 0)
+    cum = p.cum + grow.astype(p.cum.dtype) - cancel.astype(p.cum.dtype)
+    ring = jnp.minimum(p.ring, cum[:, None])
+    ring = lax.dynamic_update_slice_in_dim(ring, cum[:, None], slot, axis=1)
+    active = jnp.where(
+        shrink > 0, jnp.minimum(active, jnp.maximum(target, 0)), active
+    )
+    return active, _Pipe(ring, cum, v)
+
+
+def _spot_begin(active, p: _Pipe, u, p_reclaim):
+    """``SpotTier.begin_tick``: i.i.d. reclaims on active instances and
+    in-flight launches (cancelled newest-first), from this tick's
+    precomputed uniform pair."""
+    reclaimed = binomial_from_uniform_jnp(active, p_reclaim, u[0])
+    active = active - reclaimed
+    lost = binomial_from_uniform_jnp(p.cum - p.mat, p_reclaim, u[1])
+    p = _pipe_cancel(p, lost)
+    return active, p, reclaimed.sum() + lost.sum()
+
+
+def _harvest_begin(active, p: _Pipe, ceiling):
+    """``HarvestVMTier.begin_tick``: evict active above the granted
+    ceiling (correlated across the pool), cancel in-flight overflow
+    newest-first."""
+    evicted = jnp.maximum(active - ceiling, 0)
+    active = active - evicted
+    over = jnp.maximum(active + (p.cum - p.mat) - ceiling, 0)
+    p = _pipe_cancel(p, over)
+    return active, p, evicted.sum()
+
+
+def _offload(S, mask, last_used, t, slo_s, st):
+    """``BurstTier.offload`` of one class's drained queues: drain the
+    masked archs, zero sub-epsilon cumsum residue in the offload counts
+    (the queue rows are emptied regardless), score first-invocation
+    cold starts, bill per request."""
+    counts = S[:, -1] * mask
+    counts = jnp.where(counts <= 1e-9, 0.0, counts)
+    S = S * (~mask)[:, None]
+    cold = (t - last_used) > st["idle_timeout"]
+    lat_first = st["spinup"] + st["lat_b1"] + cold * st["cold_start"]
+    lat_warm = st["spinup"] + st["lat_b1"]
+    first = jnp.minimum(counts, 1.0)
+    viol = first * (lat_first > slo_s) + (counts - first) * (lat_warm > slo_s)
+    cost_arch = st["burst_cpr"] * counts
+    last_used = jnp.where(counts > 0, t.astype(last_used.dtype), last_used)
+    return S, counts, viol, cost_arch, last_used
+
+
+# ---------------------------------------------------------------------------
+# In-scan policies: twins of the vectorized schedulers.  Each maps
+# ``(params, obs, key) -> (action dict, extras dict)`` where obs is a
+# dict of [A] arrays (the traced PoolObs) and the action dict carries
+# ``target / offload / spot / harvest / remote`` integer arrays.
+# ---------------------------------------------------------------------------
+_OFFLOAD_SLACK_AWARE = 2
+
+
+def _scale_target(throughput, demand, headroom=1.0):
+    return jnp.maximum(1, jnp.ceil(demand * headroom / throughput)).astype(
+        jnp.int64
+    )
+
+
+def _no_action(like):
+    return jnp.zeros_like(like)
+
+
+def _pol_reactive(params, obs, key):
+    tgt = _scale_target(obs["throughput"], obs["ewma_rate"])
+    z = _no_action(tgt)
+    return dict(target=tgt, offload=z, spot=z, harvest=z, remote=z), {}
+
+
+def _pol_paragon(params, obs, key):
+    bursty = obs["peak_to_median"] >= params["bursty_threshold"]
+    headroom = jnp.where(bursty, 1.0, params["flat_cushion"])
+    demand = obs["ewma_rate"] + obs["queue_len"] / params["drain_horizon_s"]
+    tgt = _scale_target(obs["throughput"], demand, headroom)
+    z = _no_action(tgt)
+    off = jnp.full_like(tgt, _OFFLOAD_SLACK_AWARE)
+    return dict(target=tgt, offload=off, spot=z, harvest=z, remote=z), {}
+
+
+def _pol_portfolio(params, obs, key):
+    thr = obs["throughput"]
+    demand = obs["ewma_rate"] + obs["queue_len"] / params["drain_horizon_s"]
+    floor = _scale_target(thr, demand, params["strict_share"])
+    remote = (
+        params["remote_frac"] * (1 - params["strict_share"])
+        * obs["ewma_rate"] / thr
+    ).astype(jnp.int64)
+    residual = jnp.maximum(0.0, demand - (floor + remote) * thr)
+    h_frac = jnp.minimum(
+        jnp.maximum(obs["harvest_level"] - params["harvest_margin"], 0.0),
+        params["harvest_max_frac"],
+    )
+    h_want = jnp.ceil(residual * h_frac * params["harvest_buffer"] / thr)
+    harvest = jnp.minimum(h_want, obs["harvest_ceiling"]).astype(jnp.int64)
+    spot_resid = jnp.maximum(0.0, residual - harvest * thr)
+    spot = jnp.ceil(spot_resid * params["spot_buffer"] / thr).astype(jnp.int64)
+    off = jnp.full_like(floor, _OFFLOAD_SLACK_AWARE)
+    return dict(
+        target=floor, offload=off, spot=spot, harvest=harvest, remote=remote
+    ), {}
+
+
+def _net_forward(net, feats):
+    """The PPO net's forward pass (policy head via the shared
+    :func:`policy_logits` expression, value head alongside)."""
+    h = jnp.tanh(feats @ net["torso1"]["w"] + net["torso1"]["b"])
+    h = jnp.tanh(h @ net["torso2"]["w"] + net["torso2"]["b"])
+    logits = h @ net["pi"]["w"] + net["pi"]["b"]
+    value = (h @ net["v"]["w"] + net["v"]["b"])[..., 0]
+    return logits, value
+
+
+def _rl_action(params, obs, actions):
+    target, offload, spot, _vmove = procurement_targets_arrays(
+        actions,
+        ewma_rate=obs["ewma_rate"],
+        queue_strict=obs["queue_strict"],
+        queue_relaxed=obs["queue_relaxed"],
+        throughput=obs["throughput"],
+        n_spot=obs["n_spot"],
+        n_spot_pending=obs["n_spot_pending"],
+        xp=jnp,
+    )
+    z = _no_action(target)
+    return dict(target=target, offload=offload, spot=spot, harvest=z, remote=z)
+
+
+def _pol_rl_greedy(params, obs, key):
+    """``RLPoolPolicy(greedy=True)`` inside the scan: deterministic
+    argmax over the checkpoint net's logits (the parity-testable form —
+    the stochastic form needs a key stream and lives in the rollout
+    collector's ``rl_sample``)."""
+    feats = pool_features_arrays(
+        obs, obs["prev_rate"],
+        rate_scale=params["rate_scale"], fleet_scale=params["fleet_scale"],
+        xp=jnp,
+    )
+    logits = policy_logits(params["net"], feats, xp=jnp)
+    actions = jnp.argmax(logits, axis=-1)
+    return _rl_action(params, obs, actions), {}
+
+
+def _pol_rl_sample(params, obs, key):
+    """Stochastic PPO policy with rollout extras — what
+    ``collect_rollouts_jax`` scans: sampled actions, logp, value and the
+    feature matrix come back per tick, exactly the buffers the host
+    rollout loop fills."""
+    feats = pool_features_arrays(
+        obs, obs["prev_rate"],
+        rate_scale=params["rate_scale"], fleet_scale=params["fleet_scale"],
+        xp=jnp,
+    )
+    logits, value = _net_forward(params["net"], feats)
+    actions = jax.random.categorical(key, logits)
+    logp = jnp.take_along_axis(
+        jax.nn.log_softmax(logits), actions[:, None], axis=1
+    )[:, 0]
+    extras = {"obs": feats, "action": actions, "logp": logp, "value": value}
+    return _rl_action(params, obs, actions), extras
+
+
+class JaxPolicy(NamedTuple):
+    apply: Callable            # (params, obs, key) -> (actions, extras)
+    needs_stats: bool          # True: policy reads peak_to_median
+    needs_key: bool            # True: per-tick PRNG keys enter the scan
+    default_params: Callable   # () -> params pytree
+
+
+def _rl_default_params() -> dict:
+    params, meta = load_policy_checkpoint()
+    if params is None:
+        params = _fallback_params(0)
+    return {
+        "net": params,
+        "rate_scale": float(meta.get("rate_scale", 100.0)),
+        "fleet_scale": float(meta.get("fleet_scale", 10.0)),
+    }
+
+
+#: in-scan twins of the vectorized schedulers, by registry name
+JAX_POLICIES: Dict[str, JaxPolicy] = {
+    "reactive": JaxPolicy(_pol_reactive, False, False, lambda: {}),
+    "paragon": JaxPolicy(
+        _pol_paragon, True, False,
+        lambda: dict(bursty_threshold=1.5, flat_cushion=1.1,
+                     drain_horizon_s=5.0),
+    ),
+    "portfolio": JaxPolicy(
+        _pol_portfolio, False, False,
+        lambda: dict(drain_horizon_s=5.0, strict_share=0.25, remote_frac=0.3,
+                     harvest_margin=0.15, harvest_max_frac=0.8,
+                     harvest_buffer=1.1, spot_buffer=1.25),
+    ),
+    "rl_pool": JaxPolicy(_pol_rl_greedy, True, False, _rl_default_params),
+    "rl_sample": JaxPolicy(_pol_rl_sample, True, True, _rl_default_params),
+}
+
+
+# ---------------------------------------------------------------------------
+# The tick function.
+# ---------------------------------------------------------------------------
+def _tick(state: SimState, xs: dict, st: dict, policy_apply):
+    """One engine tick, pure: ``(state, inputs) -> (state, metrics)``.
+
+    Mirrors ``ServingSim.observe_pool`` + ``_step`` operation for
+    operation; see the module docstring for why the branchless form is
+    exact."""
+    t = xs["t"]
+    rate = xs["rate"]
+    A = rate.shape[0]
+
+    # ---- admit (observe_pool): age the queues, push this tick (new
+    # arrivals land in the newest bucket: only the total prefix) -------
+    qs_buf = _age_queue(state.qs_buf)
+    qr_buf = _age_queue(state.qr_buf)
+    n_strict = rate * st["strict_frac"]
+    n_relaxed = rate - n_strict
+    qs_buf = qs_buf.at[:, -1].add(n_strict)
+    qr_buf = qr_buf.at[:, -1].add(n_relaxed)
+    qs_tot = qs_buf[:, -1]
+    qr_tot = qr_buf[:, -1]
+
+    # ---- observe: the traced PoolObs (pre-provision state, like the
+    # NumPy observe_pool; idle-tier fields equal the static zeros the
+    # NumPy engine serves because a dead tier's state IS zero) ---------
+    obs = {
+        "rate": rate,
+        "ewma_rate": xs["ewma"],
+        "peak_to_median": xs["p2m"],
+        "queue_len": qs_tot + qr_tot,
+        "queue_strict": qs_tot,
+        "queue_relaxed": qr_tot,
+        "n_active": state.res_active,
+        "n_pending": (state.res_cum - state.res_mat).astype(jnp.int64),
+        "n_spot": state.spot_active,
+        "n_spot_pending": (state.spot_cum - state.spot_mat).astype(jnp.int64),
+        "n_harvest": state.harv_active,
+        "n_harvest_pending": (state.harv_cum - state.harv_mat).astype(jnp.int64),
+        "n_remote": state.rem_active,
+        "n_remote_pending": (state.rem_cum - state.rem_mat).astype(jnp.int64),
+        "throughput": st["thr"],
+        "utilization": state.last_util,
+        "last_violations": state.last_viol,
+        "harvest_level": jnp.broadcast_to(xs["h_lev_obs"], (A,)),
+        "harvest_ceiling": jnp.broadcast_to(xs["h_ceil_obs"], (A,)),
+        "spot_reclaim_risk": st["risk"],
+        "active_variant": st["zeros_i"],
+        "n_variants": st["ones_i"],
+        "accuracy": st["cur_acc"],
+        "accuracy_floor": st["acc_floor"],
+        "prev_rate": state.prev_rate,
+    }
+    acts, extras = policy_apply(st["policy"], obs, xs.get("key"))
+
+    # ---- provision (reserved, then aux in registration order).  Each
+    # tier's ring slot for this tick is t mod L (L static per tier) ----
+    res_active, res_pipe = _tier_set_target(
+        state.res_active,
+        _Pipe(state.res_ring, state.res_cum, state.res_mat),
+        acts["target"], t % state.res_ring.shape[1],
+    )
+    spot_active, spot_pipe, reclaimed = _spot_begin(
+        state.spot_active,
+        _Pipe(state.spot_ring, state.spot_cum, state.spot_mat),
+        xs["spot_u"], st["p_reclaim"],
+    )
+    spot_active, spot_pipe = _tier_set_target(
+        spot_active, spot_pipe, acts["spot"],
+        t % state.spot_ring.shape[1],
+    )
+    harv_active, harv_pipe, evicted = _harvest_begin(
+        state.harv_active,
+        _Pipe(state.harv_ring, state.harv_cum, state.harv_mat),
+        xs["h_ceil"],
+    )
+    harv_active, harv_pipe = _tier_set_target(
+        harv_active, harv_pipe, jnp.minimum(acts["harvest"], xs["h_ceil"]),
+        t % state.harv_ring.shape[1],
+    )
+    rem_active, rem_pipe = _tier_set_target(
+        state.rem_active,
+        _Pipe(state.rem_ring, state.rem_cum, state.rem_mat),
+        acts["remote"], t % state.rem_ring.shape[1],
+    )
+    preempt = reclaimed + evicted
+
+    # ---- serve: local capacity first (strict priority), then the
+    # remote group against its egress-tightened lateness prefixes ------
+    thr = st["thr"]
+    cap_local = (res_active + spot_active + harv_active) * thr
+    qs_buf, served_s, late_s = _serve(qs_buf, cap_local, st["late_s"])
+    rem_cap = rem_active * thr
+    qs_buf, srs, lrs = _serve(qs_buf, rem_cap, st["rlate_s"])
+    qr_buf, served_r, late_r = _serve(
+        qr_buf, cap_local - served_s, st["late_r"]
+    )
+    qr_buf, srr, lrr = _serve(qr_buf, rem_cap - srs, st["rlate_r"])
+    served_s, late_s = served_s + srs, late_s + lrs
+    served_r, late_r = served_r + srr, late_r + lrr
+    served = served_s + served_r
+    cap_total = cap_local + rem_cap
+    util = jnp.where(
+        cap_total > 0,
+        served / jnp.where(cap_total > 0, cap_total, 1.0),
+        1.0,
+    )
+    viol_arch = late_s + late_r
+    viol_strict = late_s.sum()
+
+    # ---- offload to burst (strict: any offload mode; relaxed: blind
+    # only), sequential so the relaxed batch sees a warmed pool --------
+    offload = acts["offload"]
+    qs_buf, counts_s, bviol_s, bcost_s, last_used = _offload(
+        qs_buf, offload >= 1, state.burst_last_used, t, st["slo_strict"], st,
+    )
+    qr_buf, counts_r, bviol_r, bcost_r, last_used = _offload(
+        qr_buf, offload == 1, last_used, t, st["slo_relaxed"], st,
+    )
+    viol_arch = viol_arch + bviol_s + bviol_r
+    viol_strict = viol_strict + bviol_s.sum()
+
+    # ---- drop the bucket that aged past the abandon window (the
+    # oldest; subtracting its prefix zeroes column 0 exactly) ----------
+    dropped_s = qs_buf[:, 0]
+    qs_buf = jnp.maximum(qs_buf - dropped_s[:, None], 0.0)
+    dropped_r = qr_buf[:, 0]
+    qr_buf = jnp.maximum(qr_buf - dropped_r[:, None], 0.0)
+    dropped = dropped_s + dropped_r
+    viol_arch = viol_arch + dropped
+    viol_strict = viol_strict + dropped_s.sum()
+
+    # ---- delivered accuracy ------------------------------------------
+    answered = served + counts_s + counts_r + dropped
+    acc_w = answered * st["cur_acc"]
+    acc_viol = answered * (st["cur_acc"] < st["acc_floor"] - 1e-12)
+
+    # ---- account ------------------------------------------------------
+    chips = st["chips"]
+    ch_res = res_active * chips
+    ch_spot = spot_active * chips
+    ch_harv = harv_active * chips
+    ch_rem = rem_active * chips
+    cost_arch = (
+        bcost_s + bcost_r
+        + ch_res * st["p_res"] + ch_spot * st["p_spot"]
+        + ch_harv * st["p_harv"] + ch_rem * st["p_rem"]
+    )
+    chip_all = ch_res + ch_spot + ch_harv + ch_rem
+    need = jnp.ceil(rate / thr) * chips
+
+    # summary key presence: a tier posts (even $0) only on live ticks
+    harv_live = (
+        harv_active.sum() + (harv_pipe.cum - harv_pipe.mat).sum()
+    ) > 0
+    rem_live = (
+        rem_active.sum() + (rem_pipe.cum - rem_pipe.mat).sum()
+    ) > 0
+
+    new_state = SimState(
+        qs_buf=qs_buf, qr_buf=qr_buf,
+        res_active=res_active,
+        res_ring=res_pipe.ring, res_cum=res_pipe.cum, res_mat=res_pipe.mat,
+        spot_active=spot_active,
+        spot_ring=spot_pipe.ring, spot_cum=spot_pipe.cum,
+        spot_mat=spot_pipe.mat,
+        harv_active=harv_active,
+        harv_ring=harv_pipe.ring, harv_cum=harv_pipe.cum,
+        harv_mat=harv_pipe.mat,
+        rem_active=rem_active,
+        rem_ring=rem_pipe.ring, rem_cum=rem_pipe.cum, rem_mat=rem_pipe.mat,
+        burst_last_used=last_used, last_util=util, last_viol=viol_arch,
+        prev_rate=rate,
+    )
+    ys = {
+        "served": served,
+        "burst": counts_s + counts_r,
+        "dropped": dropped,
+        "viol": viol_arch,
+        "viol_strict": viol_strict,
+        "acc_w": acc_w,
+        "acc_viol": acc_viol,
+        "cost_arch": cost_arch,
+        "cost_res": ch_res.sum() * st["p_res"],
+        "cost_spot": ch_spot.sum() * st["p_spot"],
+        "cost_harv": ch_harv.sum() * st["p_harv"],
+        "cost_rem": ch_rem.sum() * st["p_rem"],
+        "cost_burst": bcost_s.sum() + bcost_r.sum(),
+        "preempt": preempt,
+        "chip": chip_all.sum(),
+        "need": need.sum(),
+        "over": jnp.maximum(chip_all - need, 0.0).sum(),
+        "harv_live": harv_live,
+        "rem_live": rem_live,
+        **extras,
+    }
+    return new_state, ys
+
+
+# ---------------------------------------------------------------------------
+# Host-side input builder.
+# ---------------------------------------------------------------------------
+def _ewma_trajectory(arrivals: np.ndarray, alpha: float) -> np.ndarray:
+    """The monitor's EWMA alone (for policies that never read the
+    order-statistic fields — skips the windowed median machinery)."""
+    A, T = arrivals.shape
+    out = np.empty((T, A), dtype=np.float64)
+    e = arrivals[:, 0].astype(np.float64).copy()
+    out[0] = e
+    for t in range(1, T):
+        e = alpha * arrivals[:, t] + (1 - alpha) * e
+        out[t] = e
+    return out
+
+
+#: memoized harvest availability signals — pure functions of
+#: ``(seed, T)``, shared across the cells of a grid
+_HARV_CACHE: Dict[tuple, np.ndarray] = {}
+
+
+def _harvest_traj(seed: int, ticks: int) -> np.ndarray:
+    k = (seed, ticks)
+    if k not in _HARV_CACHE:
+        if len(_HARV_CACHE) > 256:
+            _HARV_CACHE.clear()
+        _HARV_CACHE[k] = harvest_level_trajectory(seed, ticks)
+    return _HARV_CACHE[k]
+
+
+def build_sim_inputs(
+    arrivals: np.ndarray,
+    workload: List[ArchLoad],
+    *,
+    pricing: FleetPricing = PRICING,
+    seed: int = 0,
+    prewarm: bool = True,
+    warm_start: bool = True,
+    needs_stats: bool = True,
+    needs_key: bool = False,
+    key=None,
+    ewma: Optional[np.ndarray] = None,
+    _sim: Optional[ServingSim] = None,
+):
+    """Materialize ``(statics, state0, xs)`` for one scan — NumPy host
+    arrays throughout (device transfer happens at the jit boundary).
+
+    ``statics`` is the traced per-run constant pytree (slip the policy
+    parameters in under ``statics["policy"]``); ``xs`` holds the
+    per-tick inputs with leading time axis.  All derived quantities are
+    read off a throwaway :class:`ServingSim` so the two engines share
+    one construction path and cannot drift — ``_sim`` lets
+    :func:`run_grid` amortize that construction over cells sharing a
+    workload (every sim-derived quantity is arrival- and
+    seed-independent except the warm-start fleet, recomputed here), and
+    ``ewma`` likewise injects a precomputed smoothing trajectory.
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    assert arrivals.ndim == 2, "the JAX engine needs an [A, T] matrix"
+    A, T = arrivals.shape
+    sim = _sim if _sim is not None else ServingSim(
+        arrivals, workload, pricing=pricing, prewarm=prewarm,
+        warm_start=warm_start, seed=seed,
+    )
+    assert not sim._variants_live, (
+        "the JAX engine covers the single-variant pipeline (no catalog)"
+    )
+
+    if needs_stats:
+        ewma, _, p2m = pool_stats_trajectory(arrivals)
+    else:
+        if ewma is None:
+            ewma = _ewma_trajectory(arrivals, LoadMonitor.ewma_alpha)
+        # no policy on this path reads peak_to_median: a broadcastable
+        # placeholder keeps it out of the grid's host->device traffic
+        p2m = np.ones((T, 1), dtype=np.float64)
+
+    cap = pricing.harvest_cap_per_arch
+    lev = _harvest_traj(seed, T)
+    h_lev_obs = np.concatenate([[1.0], lev[:-1]])   # level BEFORE the advance
+    statics = {
+        "strict_frac": sim.strict_frac.astype(np.float64),
+        "thr": sim.eff_throughput,
+        "chips": sim.eff_chips,
+        "cur_acc": sim.cur_acc,
+        "acc_floor": sim.acc_floor.astype(np.float64),
+        # lateness as prefix lengths: how many of the oldest buckets
+        # violate each arch's slack (masks are age-contiguous)
+        "late_s": _n_late(sim.q_strict._late_mask),
+        "late_r": _n_late(sim.q_relaxed._late_mask),
+        "rlate_s": _n_late(sim._remote_late_strict),
+        "rlate_r": _n_late(sim._remote_late_relaxed),
+        # finalize prefixes: buffer age + 1 (the sweep runs at tick T)
+        "fin_s": _n_late(_finalize_mask(sim.q_strict)),
+        "fin_r": _n_late(_finalize_mask(sim.q_relaxed)),
+        "lat_b1": sim.burst.lat_b1,
+        "cold_start": sim.burst.cold_start_s,
+        "burst_cpr": sim.burst.cost_per_request,
+        "spinup": float(pricing.burst_spinup_s),
+        "idle_timeout": float(pricing.burst_idle_timeout_s),
+        "slo_strict": sim.q_strict.slo_s,
+        "slo_relaxed": sim.q_relaxed.slo_s,
+        "p_res": sim.reserved.price_per_chip_s(),
+        "p_spot": sim.spot.price_per_chip_s(),
+        "p_harv": sim.harvest.price_per_chip_s(),
+        "p_rem": sim.remote.price_per_chip_s(),
+        "p_reclaim": sim.spot.reclaim_probability(),
+        "risk": np.full(A, sim.spot.reclaim_probability()),
+        "zeros_i": np.zeros(A, dtype=np.int64),
+        "ones_i": np.ones(A, dtype=np.int64),
+        "policy": {},            # caller / run_scenario fills this in
+    }
+    if warm_start:
+        # the sim's own warm-start rule, recomputed so a reused _sim
+        # still yields THIS cell's t=0 fleet
+        res_active0 = np.maximum(
+            1, np.ceil(arrivals[:, 0] / sim.eff_throughput)
+        ).astype(np.int64)
+    else:
+        res_active0 = sim.reserved.active.copy()
+    state0 = SimState(
+        qs_buf=np.zeros((A, sim.q_strict.window), dtype=np.float64),
+        qr_buf=np.zeros((A, sim.q_relaxed.window), dtype=np.float64),
+        res_active=res_active0,
+        res_ring=np.zeros((A, sim.reserved.pipeline.lat), dtype=np.int32),
+        res_cum=np.zeros(A, dtype=np.int32),
+        res_mat=np.zeros(A, dtype=np.int32),
+        spot_active=np.zeros(A, dtype=np.int64),
+        spot_ring=np.zeros((A, sim.spot.pipeline.lat), dtype=np.int32),
+        spot_cum=np.zeros(A, dtype=np.int32),
+        spot_mat=np.zeros(A, dtype=np.int32),
+        harv_active=np.zeros(A, dtype=np.int64),
+        harv_ring=np.zeros((A, sim.harvest.pipeline.lat), dtype=np.int32),
+        harv_cum=np.zeros(A, dtype=np.int32),
+        harv_mat=np.zeros(A, dtype=np.int32),
+        rem_active=np.zeros(A, dtype=np.int64),
+        rem_ring=np.zeros((A, sim.remote.pipeline.lat), dtype=np.int32),
+        rem_cum=np.zeros(A, dtype=np.int32),
+        rem_mat=np.zeros(A, dtype=np.int32),
+        burst_last_used=sim.burst.last_used.copy(),
+        last_util=np.zeros(A, dtype=np.float64),
+        last_viol=np.zeros(A, dtype=np.float64),
+        prev_rate=arrivals[:, 0].copy(),         # trend feature = 0 at t=0
+    )
+    xs = {
+        "t": np.arange(T, dtype=np.int64),
+        "rate": np.ascontiguousarray(arrivals.T),
+        "ewma": ewma,
+        "p2m": p2m,
+        "spot_u": spot_reclaim_uniforms(seed, T, A),
+        "h_ceil": (lev * cap).astype(np.int64),
+        "h_lev_obs": h_lev_obs,
+        "h_ceil_obs": (h_lev_obs * cap).astype(np.int64),
+    }
+    if needs_key:
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        xs["key"] = _split_keys(key, T)
+    return statics, state0, xs
+
+
+def _finalize_mask(q) -> np.ndarray:
+    """Lateness mask for the end-of-trace sweep: the sweep runs one tick
+    after the last shift, so every bucket is one tick older than its
+    column says."""
+    ages = np.arange(q.window - 1, -1, -1) + 1
+    return ages[None, :] > q.slack[:, None]
+
+
+def _n_late(mask: np.ndarray) -> np.ndarray:
+    """An oldest-first lateness mask is always age-contiguous from
+    bucket 0, so its per-arch count fully describes it — the gather
+    index the prefix queues score lateness with."""
+    n = mask.sum(axis=1).astype(np.int64)
+    w = mask.shape[1]
+    assert (mask == (np.arange(w)[None, :] < n[:, None])).all()
+    return n
+
+
+def _split_keys(key, n: int) -> np.ndarray:
+    """``n`` per-tick keys via the host rollout loop's split sequence
+    (``key, k_t = split(key)`` each tick)."""
+    keys = np.empty((n, 2), dtype=np.uint32)
+    for t in range(n):
+        key, kt = jax.random.split(key)
+        keys[t] = np.asarray(jax.random.key_data(kt))
+    return keys
+
+
+# ---------------------------------------------------------------------------
+# Runners: jitted scan (optionally vmapped), cached per policy so
+# repeated calls of the same (A, T, policy) shape never re-trace.
+# ---------------------------------------------------------------------------
+_RUNNERS: Dict[tuple, Any] = {}
+
+
+def make_runner(policy_apply, mode: str = "sum"):
+    """Build ``run(statics, state0, xs) -> out`` around one policy.
+
+    ``mode="sum"`` reduces the per-tick metrics in-graph (scenario
+    evaluation); ``mode="stack"`` returns them per tick (rollout
+    collection).  Not jitted or cached — see :func:`_get_runner`.
+    """
+
+    def run(statics, state0, xs):
+        def f(carry, x):
+            return _tick(carry, x, statics, policy_apply)
+
+        final, ys = lax.scan(f, state0, xs)
+        out = {
+            "final": final,
+            "expired_s": _late_mass(final.qs_buf, statics["fin_s"]),
+            "expired_r": _late_mass(final.qr_buf, statics["fin_r"]),
+        }
+        if mode == "sum":
+            out["totals"] = jax.tree.map(lambda a: a.sum(axis=0), ys)
+        else:
+            out["ys"] = ys
+        return out
+
+    return run
+
+
+def _get_runner(policy: str, mode: str = "sum", batched: bool = False):
+    key = (policy, mode, batched)
+    if key not in _RUNNERS:
+        base = make_runner(JAX_POLICIES[policy].apply, mode)
+        if batched:
+            # one statics pytree serves every cell (grid cells share a
+            # workload); only policy params, state and per-tick inputs
+            # carry the batch axis
+            def grid(statics, policy_params, state0, xs):
+                return base({**statics, "policy": policy_params}, state0, xs)
+
+            fn = jax.vmap(grid, in_axes=(None, 0, 0, 0))
+        else:
+            fn = base
+        _RUNNERS[key] = jax.jit(fn)
+    return _RUNNERS[key]
+
+
+def runner_trace_count(policy: str, mode: str = "sum",
+                       batched: bool = False) -> int:
+    """How many distinct shapes the cached runner has traced (the
+    recompile guard: repeated same-shape runs must report 1)."""
+    fn = _RUNNERS.get((policy, mode, batched))
+    return 0 if fn is None else fn._cache_size()
+
+
+# ---------------------------------------------------------------------------
+# Result assembly (mirrors SimResult.summary / per_arch_counts).
+# ---------------------------------------------------------------------------
+def _assemble(out: dict, arrivals: np.ndarray) -> dict:
+    tot = out["totals"]
+    exp_s, exp_r = out["expired_s"], out["expired_r"]
+    expired = exp_s + exp_r
+    total_requests = float(arrivals.sum())
+    viol_total = float(tot["viol"].sum() + expired.sum())
+    viol_strict = float(tot["viol_strict"] + exp_s.sum())
+    served_vm = float(tot["served"].sum() + tot["dropped"].sum())
+    served_burst = float(tot["burst"].sum())
+    answered = served_vm + served_burst
+    cost_res = float(tot["cost_res"])
+    cost_spot = float(tot["cost_spot"])
+    cost_burst = float(tot["cost_burst"])
+    cost_harv = float(tot["cost_harv"])
+    cost_rem = float(tot["cost_rem"])
+    chip = float(tot["chip"])
+    need = float(tot["need"])
+    over = float(tot["over"])
+
+    summary = {
+        "cost_total": round(
+            cost_res + cost_spot + cost_burst + cost_harv + cost_rem, 4
+        ),
+        "cost_reserved": round(cost_res, 4),
+        "cost_spot": round(cost_spot, 4),
+        "cost_burst": round(cost_burst, 4),
+    }
+    # tier keys appear iff the tier was ever live (it posts $0 entries
+    # on pipeline-only ticks) — same rule as the lazy NumPy accounting
+    if bool(tot["harv_live"]):
+        summary["cost_harvest"] = round(cost_harv, 4)
+    if bool(tot["rem_live"]):
+        summary["cost_remote"] = round(cost_rem, 4)
+    summary.update({
+        "preemptions": int(tot["preempt"]),
+        "violation_rate": round(viol_total / max(total_requests, 1e-9), 5),
+        "violations_strict": round(viol_strict, 1),
+        "served_vm": round(served_vm, 1),
+        "served_burst": round(served_burst, 1),
+        "overprovision_ratio": round(over / max(need, 1e-9), 4),
+        "chip_seconds": round(chip, 1),
+    })
+    if answered > 0:
+        acc_w = float(tot["acc_w"].sum())
+        summary["mean_accuracy"] = round(acc_w / max(answered, 1e-9), 5)
+        summary["acc_violation_rate"] = round(
+            float(tot["acc_viol"].sum()) / max(answered, 1e-9), 5
+        )
+        summary["variant_swaps"] = 0
+
+    final: SimState = out["final"]
+    per_arch = {
+        "arrived": arrivals.sum(axis=1),
+        "served_vm": tot["served"],
+        "served_burst": tot["burst"],
+        "dropped": tot["dropped"],
+        "expired_end": expired,
+        "violations": tot["viol"] + expired,
+        "queued": (final.qs_buf[:, -1] - exp_s) + (final.qr_buf[:, -1] - exp_r),
+        "acc_weight": tot["acc_w"],
+        "acc_violations": tot["acc_viol"],
+    }
+    return {"summary": summary, "per_arch": per_arch, "raw": out}
+
+
+def _tree_to_host(out):
+    return jax.tree.map(np.asarray, out)
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *leaves: np.stack(leaves), *trees)
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points.
+# ---------------------------------------------------------------------------
+def run_scenario(
+    arrivals: np.ndarray,
+    workload: List[ArchLoad],
+    policy: str = "portfolio",
+    params: Optional[dict] = None,
+    *,
+    pricing: FleetPricing = PRICING,
+    seed: int = 0,
+    prewarm: bool = True,
+    warm_start: bool = True,
+) -> dict:
+    """One scenario through the jitted scan; returns ``{"summary",
+    "per_arch", "raw"}`` with the summary shaped exactly like
+    ``SimResult.summary()`` from the NumPy engine."""
+    pol = JAX_POLICIES[policy]
+    statics, state0, xs = build_sim_inputs(
+        arrivals, workload, pricing=pricing, seed=seed, prewarm=prewarm,
+        warm_start=warm_start, needs_stats=pol.needs_stats,
+        needs_key=pol.needs_key,
+    )
+    statics["policy"] = pol.default_params() if params is None else params
+    with enable_x64():
+        out = _tree_to_host(_get_runner(policy)(statics, state0, xs))
+    return _assemble(out, np.asarray(arrivals, dtype=np.float64))
+
+
+def run_grid(
+    arrivals_batch: np.ndarray,              # [B, A, T]
+    workload: List[ArchLoad],
+    policy: str = "portfolio",
+    params_batch: Optional[List[dict]] = None,
+    seeds: Optional[List[int]] = None,
+    *,
+    pricing: FleetPricing = PRICING,
+    prewarm: bool = True,
+    warm_start: bool = True,
+) -> List[dict]:
+    """A whole (scenario x seed x policy-params) grid in ONE vmapped
+    dispatch: cell ``i`` runs ``arrivals_batch[i]`` under
+    ``params_batch[i]`` with spot/harvest realizations from
+    ``seeds[i]``.  Returns one :func:`run_scenario`-shaped dict per
+    cell."""
+    arrivals_batch = np.asarray(arrivals_batch, dtype=np.float64)
+    B, A, T = arrivals_batch.shape
+    pol = JAX_POLICIES[policy]
+    seeds = list(seeds) if seeds is not None else [0] * B
+    assert len(seeds) == B
+    # one template sim serves the whole grid (cells share the
+    # workload); the per-cell EWMA runs as a single batched recurrence
+    sim = ServingSim(
+        arrivals_batch[0], workload, pricing=pricing, prewarm=prewarm,
+        warm_start=warm_start, seed=seeds[0],
+    )
+    if pol.needs_stats:
+        ewmas = [None] * B
+    else:
+        ew = _ewma_trajectory(
+            arrivals_batch.reshape(B * A, T), LoadMonitor.ewma_alpha
+        )
+        ewmas = [ew[:, i * A:(i + 1) * A] for i in range(B)]
+    cells = [
+        build_sim_inputs(
+            arrivals_batch[i], workload, pricing=pricing, seed=seeds[i],
+            prewarm=prewarm, warm_start=warm_start,
+            needs_stats=pol.needs_stats, needs_key=pol.needs_key,
+            key=jax.random.PRNGKey(seeds[i]) if pol.needs_key else None,
+            ewma=ewmas[i], _sim=sim,
+        )
+        for i in range(B)
+    ]
+    statics = cells[0][0]
+    state0_b = _tree_stack([c[1] for c in cells])
+    xs_b = _tree_stack([c[2] for c in cells])
+    if params_batch is None:
+        params_batch = [pol.default_params() for _ in range(B)]
+    policy_b = _tree_stack(list(params_batch))
+    with enable_x64():
+        out = _tree_to_host(
+            _get_runner(policy, batched=True)(statics, policy_b, state0_b, xs_b)
+        )
+    return [
+        _assemble(_tree_index(out, i), arrivals_batch[i]) for i in range(B)
+    ]

@@ -27,6 +27,23 @@ from typing import Deque, List, Tuple
 import numpy as np
 
 
+def cumsum_serve(counts, capacity, late_mask, *, xp=np):
+    """Serve ``capacity[a]`` from ``counts[a, w]`` buckets oldest-first.
+
+    ``counts`` columns must be ordered oldest -> newest; a cumulative sum
+    allocates capacity front-to-back and ``late_mask`` scores which
+    buckets violate.  Backend-parametric (``xp`` is ``numpy`` or
+    ``jax.numpy``): :class:`QueueArray` runs it eagerly and the batched
+    JAX engine traces the identical expression inside ``lax.scan``, so
+    the two serve paths cannot drift.  Returns ``(left, served, late)``.
+    """
+    before = xp.cumsum(counts, axis=1) - counts
+    take = xp.minimum(counts, xp.clip(capacity[:, None] - before, 0.0, None))
+    served = take.sum(axis=1)
+    late = (take * late_mask).sum(axis=1)
+    return counts - take, served, late
+
+
 # ---------------------------------------------------------------------------
 # Scalar reference queue (seed implementation).
 # ---------------------------------------------------------------------------
@@ -143,12 +160,9 @@ class QueueArray:
 
         idx = self._cols[tick % self.window]
         counts = self.buf[:, idx]
-        before = np.cumsum(counts, axis=1) - counts
-        take = np.minimum(counts, np.clip(capacity[:, None] - before, 0.0, None))
-        self.buf[:, idx] = counts - take
-        served = take.sum(axis=1)
         mask = self._late_mask if late_mask is None else late_mask
-        late = (take * mask).sum(axis=1)
+        left, served, late = cumsum_serve(counts, capacity, mask)
+        self.buf[:, idx] = left
         self.total = self.total - served
         self.backlog = bool(self.total.any())
         return served, late

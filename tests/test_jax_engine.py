@@ -1,0 +1,324 @@
+"""Differential tests: the jitted JAX engine vs the NumPy oracle.
+
+The batched engine (``repro.core.sim.jax_engine``) re-expresses the
+structure-of-arrays tick pipeline as a pure-functional ``lax.scan``;
+the NumPy :class:`~repro.core.sim.ServingSim` stays the semantic
+oracle.  These tests pin the two together:
+
+* differential fuzz over zoo scenarios / seeds / policies — RAW
+  (unrounded) ledger totals at 1e-6 relative tolerance plus
+  summary-key-set equality (rounded values may differ by one rounding
+  ulp from summation order, the raw comparison is the strict one);
+* per-arch flow conservation (arrived == served + offloaded + dropped
+  + expired + still-queued, per arch) and accuracy-mass consistency;
+* ``SimState`` pytree round-trip;
+* the jit-recompile guard — repeated same-shape runs must hit one
+  trace per (A, T, policy) shape;
+* the vmapped grid vs per-cell ``run_scenario`` parity;
+* the building blocks the scan shares with the host path (binomial
+  inverse-CDF, feature build).
+
+Tests named ``*_smoke_*`` are the CI subset (``-k smoke``).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.rl.obs import pool_features, pool_features_arrays
+from repro.core.schedulers import VECTOR_SCHEDULERS
+from repro.core.sim import ServingSim
+from repro.core.sim import jax_engine as je
+from repro.core.sim.fleet import BINOMIAL_KMAX, binomial_from_uniform
+from repro.core.sim.types import ArchLoad
+from repro.core.workloads import SCENARIO_ZOO
+
+ARCHS = ["llama3-8b", "minicpm-2b", "qwen1.5-0.5b"]
+
+#: raw SimResult attribute -> how to read it off the jax raw totals
+_LEDGER_KEYS = (
+    "cost_reserved", "cost_spot", "cost_burst", "cost_harvest",
+    "cost_remote", "violations", "violations_strict", "served_vm",
+    "served_burst", "preemptions", "chip_seconds", "chip_seconds_needed",
+    "chip_seconds_over", "accuracy_weighted", "accuracy_served",
+    "acc_violations",
+)
+
+
+def _workload(A):
+    return [
+        ArchLoad(ARCHS[i % len(ARCHS)], 1.0 / A, 0.25, name=f"m@{i}")
+        for i in range(A)
+    ]
+
+
+def _numpy_run(arrivals, workload, policy, seed=0):
+    sim = ServingSim(arrivals, workload, seed=seed)
+    if policy == "rl_pool":
+        from repro.core.rl.policy import RLPoolPolicy
+        pol = RLPoolPolicy(greedy=True)
+    else:
+        pol = VECTOR_SCHEDULERS[policy]()
+    while not sim.done:
+        sim.apply_pool(pol(sim.tick, sim.observe_pool()))
+    return sim
+
+
+def _raw_ledger_np(res):
+    return {
+        "cost_reserved": res.cost_reserved,
+        "cost_spot": res.cost_spot,
+        "cost_burst": res.cost_burst,
+        "cost_harvest": res.cost_other.get("harvest", 0.0),
+        "cost_remote": res.cost_other.get("remote", 0.0),
+        "violations": res.violations,
+        "violations_strict": res.violations_strict,
+        "served_vm": res.served_vm,
+        "served_burst": res.served_burst,
+        "preemptions": float(res.preemptions),
+        "chip_seconds": res.chip_seconds,
+        "chip_seconds_needed": res.chip_seconds_needed,
+        "chip_seconds_over": res.chip_seconds_over,
+        "accuracy_weighted": res.accuracy_weighted,
+        "accuracy_served": res.accuracy_served,
+        "acc_violations": res.acc_violations,
+    }
+
+
+def _raw_ledger_jx(out):
+    tot = out["raw"]["totals"]
+    exp_s, exp_r = out["raw"]["expired_s"], out["raw"]["expired_r"]
+    served = float(tot["served"].sum() + tot["dropped"].sum())
+    burst = float(tot["burst"].sum())
+    return {
+        "cost_reserved": float(tot["cost_res"]),
+        "cost_spot": float(tot["cost_spot"]),
+        "cost_burst": float(tot["cost_burst"]),
+        "cost_harvest": float(tot["cost_harv"]),
+        "cost_remote": float(tot["cost_rem"]),
+        "violations": float(tot["viol"].sum() + exp_s.sum() + exp_r.sum()),
+        "violations_strict": float(tot["viol_strict"] + exp_s.sum()),
+        "served_vm": served,
+        "served_burst": burst,
+        "preemptions": float(tot["preempt"]),
+        "chip_seconds": float(tot["chip"]),
+        "chip_seconds_needed": float(tot["need"]),
+        "chip_seconds_over": float(tot["over"]),
+        "accuracy_weighted": float(tot["acc_w"].sum()),
+        "accuracy_served": served + burst,
+        "acc_violations": float(tot["acc_viol"].sum()),
+    }
+
+
+def _assert_equivalent(arrivals, workload, policy, seed=0):
+    sim = _numpy_run(arrivals, workload, policy, seed=seed)
+    out = je.run_scenario(arrivals, workload, policy, seed=seed)
+    raw_np = _raw_ledger_np(sim.res)
+    raw_jx = _raw_ledger_jx(out)
+    for k in _LEDGER_KEYS:
+        assert raw_jx[k] == pytest.approx(raw_np[k], rel=1e-6, abs=1e-6), (
+            f"{policy}: raw ledger key {k!r} drifted "
+            f"(np={raw_np[k]!r} jax={raw_jx[k]!r})"
+        )
+    # rounded summaries expose the same keys (values may sit one
+    # rounding ulp apart from summation order — the raw check above is
+    # the strict one)
+    assert set(out["summary"]) == set(sim.res.summary())
+    # per-arch flow totals line up with the oracle's
+    counts = sim.per_arch_counts()
+    per = out["per_arch"]
+    for k in ("served_vm", "served_burst", "dropped", "violations",
+              "acc_weight", "acc_violations"):
+        np.testing.assert_allclose(
+            per[k], counts[k], rtol=1e-6, atol=1e-6, err_msg=f"per-arch {k}"
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Differential fuzz.
+# ---------------------------------------------------------------------------
+def test_smoke_fuzz_zoo_portfolio_small():
+    """CI subset: two zoo scenarios under the portfolio policy."""
+    A, T = 4, 300
+    wl = _workload(A)
+    for scn in ("shared_berkeley", "mmpp_bursts"):
+        arr = SCENARIO_ZOO[scn].build(A, duration_s=T)
+        _assert_equivalent(arr, wl, "portfolio", seed=3)
+
+
+def test_fuzz_all_zoo_scenarios_portfolio():
+    """Every SCENARIO_ZOO preset matches under the portfolio policy
+    (the policy that exercises all four procurement tiers)."""
+    A, T = 4, 400
+    wl = _workload(A)
+    for i, scn in enumerate(sorted(SCENARIO_ZOO)):
+        arr = SCENARIO_ZOO[scn].build(A, duration_s=T, seed=20 + i)
+        _assert_equivalent(arr, wl, "portfolio", seed=i)
+
+
+def test_fuzz_policies_and_shapes():
+    """Random (scenario, seed, policy, shape) draws across the other
+    in-scan policies."""
+    rng = np.random.default_rng(7)
+    names = sorted(SCENARIO_ZOO)
+    cases = [("reactive", 4, 400), ("paragon", 4, 400),
+             ("portfolio", 6, 600), ("reactive", 2, 250)]
+    for policy, A, T in cases:
+        scn = names[rng.integers(len(names))]
+        seed = int(rng.integers(100))
+        arr = SCENARIO_ZOO[scn].build(A, duration_s=T, seed=seed)
+        _assert_equivalent(arr, _workload(A), policy, seed=seed)
+
+
+def test_fuzz_rl_pool_parity():
+    """The in-scan rl_pool twin matches RLPoolPolicy(greedy=True)
+    driving the NumPy engine — net forward, feature build, procurement
+    decode and engine semantics all at once."""
+    A, T = 4, 400
+    arr = SCENARIO_ZOO["diurnal_phases"].build(A, duration_s=T)
+    _assert_equivalent(arr, _workload(A), "rl_pool", seed=0)
+
+
+def test_flow_conservation_per_arch():
+    """arrived == served_vm + served_burst + dropped + expired + queued
+    per arch (the invariant ``ServingSim.per_arch_counts`` documents),
+    and the accuracy mass stays within the answered mass (weights are
+    per-request accuracies in [0, 1])."""
+    A, T = 6, 600
+    wl = _workload(A)
+    arr = SCENARIO_ZOO["flash_anti"].build(A, duration_s=T)
+    out = je.run_scenario(arr, wl, "portfolio")
+    per = out["per_arch"]
+    answered = per["served_vm"] + per["served_burst"] + per["dropped"]
+    np.testing.assert_allclose(
+        per["arrived"],
+        answered + per["expired_end"] + per["queued"],
+        rtol=1e-9, atol=1e-6,
+    )
+    assert (per["acc_weight"] >= -1e-9).all()
+    assert (per["acc_weight"] <= answered + 1e-6).all()
+    assert (per["acc_violations"] <= answered + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# Pytree / jit machinery.
+# ---------------------------------------------------------------------------
+def test_simstate_pytree_roundtrip():
+    A, T = 3, 50
+    arr = SCENARIO_ZOO["shared_berkeley"].build(A, duration_s=T)
+    _, state0, _ = je.build_sim_inputs(arr, _workload(A))
+    leaves, treedef = jax.tree.flatten(state0)
+    assert len(leaves) == len(je.SimState._fields)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, je.SimState)
+    for a, b in zip(jax.tree.leaves(rebuilt), leaves):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_smoke_recompile_guard():
+    """Repeated same-shape runs reuse one trace; a new (A, T) shape
+    adds exactly one more."""
+    wl4 = _workload(4)
+    arr = SCENARIO_ZOO["shared_berkeley"].build(4, duration_s=120)
+    je.run_scenario(arr, wl4, "reactive")
+    n0 = je.runner_trace_count("reactive")
+    for seed in (1, 2):
+        je.run_scenario(arr, wl4, "reactive", seed=seed)
+    assert je.runner_trace_count("reactive") == n0
+    arr2 = SCENARIO_ZOO["shared_berkeley"].build(5, duration_s=120)
+    je.run_scenario(arr2, _workload(5), "reactive")
+    assert je.runner_trace_count("reactive") == n0 + 1
+
+
+def test_smoke_grid_matches_run_scenario():
+    """One vmapped dispatch over (scenario x seed) cells reproduces the
+    per-cell scan summaries exactly."""
+    A, T, B = 4, 200, 3
+    wl = _workload(A)
+    names = ("shared_berkeley", "mmpp_bursts", "flash_correlated")
+    arrs = np.stack([
+        SCENARIO_ZOO[n].build(A, duration_s=T, seed=30 + i)
+        for i, n in enumerate(names)
+    ])
+    seeds = [5, 6, 7]
+    cells = je.run_grid(arrs, wl, "portfolio", seeds=seeds)
+    for i in range(B):
+        single = je.run_scenario(arrs[i], wl, "portfolio", seed=seeds[i])
+        assert cells[i]["summary"] == single["summary"], f"cell {i}"
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks.
+# ---------------------------------------------------------------------------
+def test_binomial_jnp_matches_numpy():
+    """The in-scan inverse-CDF binomial is the NumPy twin's, bit for
+    bit, across the (n, p, u) grid both engines draw from."""
+    from jax.experimental import enable_x64
+
+    rng = np.random.default_rng(0)
+    n = rng.integers(0, BINOMIAL_KMAX + 10, size=200)
+    u = rng.random(200)
+    for p in (0.0, 1e-4, 0.01, 0.3, 1.0):
+        want = binomial_from_uniform(n, p, u)
+        with enable_x64():      # the scan always runs in x64
+            got = np.asarray(je.binomial_from_uniform_jnp(
+                np.asarray(n), float(p), np.asarray(u)
+            ))
+        np.testing.assert_array_equal(got, want, err_msg=f"p={p}")
+
+
+def test_pool_features_arrays_parity():
+    """The backend-parametric feature build matches the deployed NumPy
+    one elementwise on a materialized PoolObs."""
+    A, T = 4, 60
+    wl = _workload(A)
+    arr = SCENARIO_ZOO["shared_berkeley"].build(A, duration_s=T)
+    sim = ServingSim(arr, wl)
+    pol = VECTOR_SCHEDULERS["portfolio"]()
+    for _ in range(30):
+        sim.apply_pool(pol(sim.tick, sim.observe_pool()))
+    obs = sim.observe_pool()
+    prev = obs.rate * 0.9
+    want = pool_features(obs, prev, rate_scale=100.0, fleet_scale=10.0)
+    o = {f: np.broadcast_to(np.asarray(getattr(obs, f)), (A,))
+         for f in ("rate", "ewma_rate", "peak_to_median", "queue_strict",
+                   "queue_relaxed", "n_active", "n_pending", "utilization",
+                   "last_violations", "active_variant", "n_variants",
+                   "accuracy", "accuracy_floor", "n_spot", "n_spot_pending",
+                   "spot_reclaim_risk", "harvest_level")}
+    got = pool_features_arrays(
+        o, prev, rate_scale=100.0, fleet_scale=10.0, xp=np
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Batched rollout collection.
+# ---------------------------------------------------------------------------
+def test_collect_rollouts_jax_buffers():
+    """The in-scan collector returns the host loop's buffer layout,
+    deterministically per key, with the episode-end reward carrying the
+    finalize sweep."""
+    from repro.core.rl.env import EnvConfig, PoolServingEnv
+    from repro.core.rl.ppo import OBS_DIM, PPOConfig, collect_rollouts_jax, init_net
+
+    A, T = 4, 200
+    arr = SCENARIO_ZOO["shared_berkeley"].build(A, duration_s=T)
+    env = PoolServingEnv(_workload(A), EnvConfig(duration_s=T), arrivals=arr)
+    params = init_net(jax.random.key(0), PPOConfig())
+    key = jax.random.key(11)
+    buf = collect_rollouts_jax(env, params, key)
+    assert buf["obs"].shape == (T, A, OBS_DIM)
+    for k in ("actions", "logp", "values", "rewards"):
+        assert buf[k].shape == (T, A), k
+    assert buf["dones"].sum() == 1.0 and buf["dones"][-1] == 1.0
+    assert np.isfinite(buf["rewards"]).all()
+    assert (buf["logp"] <= 1e-6).all()
+    buf2 = collect_rollouts_jax(env, params, key)
+    for k in buf:
+        np.testing.assert_array_equal(buf[k], buf2[k], err_msg=k)
+    # a different key draws a different action stream
+    buf3 = collect_rollouts_jax(env, params, jax.random.key(12))
+    assert (buf3["actions"] != buf["actions"]).any()

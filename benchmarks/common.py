@@ -9,6 +9,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import platform
+import subprocess
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -40,10 +42,52 @@ BENCH_SMALL = os.environ.get("BENCH_SMALL", "") == "1"
 Row = Tuple[str, float, str, bool]
 
 
-def write_artifact(name: str, payload: Any) -> str:
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=5,
+        )
+        return out.stdout.strip() if out.returncode == 0 else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def run_provenance(t0: Optional[float] = None) -> Dict[str, Any]:
+    """Who/what/where stamp attached to every benchmark artifact.
+
+    Records enough to reproduce or discount a number later: the exact
+    commit, the numpy/jax versions the run saw, the platform, whether it
+    was a BENCH_SMALL smoke, and (if ``t0`` from ``time.perf_counter()``
+    is given) the wall time of the producing run.
+    """
+    import numpy as np
+    prov: Dict[str, Any] = {
+        "git_sha": _git_sha(),
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "platform": platform.platform(),
+        "bench_small": BENCH_SMALL,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+    try:
+        import jax
+        prov["jax"] = jax.__version__
+        prov["jax_backend"] = jax.default_backend()
+    except Exception:
+        prov["jax"] = None
+    if t0 is not None:
+        prov["wall_s"] = round(time.perf_counter() - t0, 3)
+    return prov
+
+
+def write_artifact(name: str, payload: Any, t0: Optional[float] = None) -> str:
     # small smoke runs must not clobber the committed full-run artifacts
     if BENCH_SMALL:
         name = f"{name}_small"
+    if isinstance(payload, dict) and "provenance" not in payload:
+        payload = {**payload, "provenance": run_provenance(t0)}
     os.makedirs(os.path.abspath(ARTIFACTS), exist_ok=True)
     path = os.path.join(os.path.abspath(ARTIFACTS), f"{name}.json")
     with open(path, "w") as f:

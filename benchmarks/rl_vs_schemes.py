@@ -138,11 +138,16 @@ def run(iterations: int = ITERATIONS) -> bool:
     scenarios = list(SCENARIO_ZOO.values())
 
     train_env = PoolServingEnv(wl, envcfg, scenarios=scenarios, scenario_seed=1)
+    log_name = "training_log_small.jsonl" if BENCH_SMALL else "training_log.jsonl"
+    log_path = os.path.join(
+        os.path.dirname(__file__), "..", "artifacts", "rl", log_name
+    )
     state = train_ppo_pool(
         train_env,
         PPOConfig(iterations=iterations, rollout_len=TRAIN_DURATION_S,
                   entropy_coef=ENTROPY_COEF, seed=0),
         jax_rollouts=JAX_ROLLOUTS,
+        log_path=log_path,
     )
     train_wall = time.perf_counter() - t0
 
@@ -300,6 +305,30 @@ def run(iterations: int = ITERATIONS) -> bool:
             "scenarios ('rl_obj_over_best' < 1).".format(PENALTY)
         ),
     }
+    # training-curve summary (the full per-iteration stream is also on
+    # disk at ``log_path`` as JSONL, one row per iteration)
+    hist = state.history
+    first, last = hist[0], hist[-1]
+    curve = {
+        "log_path": os.path.relpath(os.path.abspath(log_path)),
+        "iterations": len(hist),
+        "loss_first": first["loss_mean"],
+        "loss_last": last["loss_mean"],
+        "entropy_first": first["entropy_mean"],
+        "entropy_last": last["entropy_mean"],
+        "approx_kl_mean": float(np.mean([h["approx_kl"] for h in hist])),
+        "approx_kl_max": float(np.max([h["approx_kl"] for h in hist])),
+        "reward_first": first["rollout_reward"],
+        "reward_last": last["rollout_reward"],
+        "reward_best": state.best_reward,
+        # trend over the curve's halves: positive means the second half
+        # of training out-earned the first (scenario resampling makes
+        # single-iteration rewards noisy)
+        "reward_trend": float(
+            np.mean([h["rollout_reward"] for h in hist[len(hist) // 2:]])
+            - np.mean([h["rollout_reward"] for h in hist[:max(len(hist) // 2, 1)]])
+        ),
+    }
     payload = {
         "pool": SERVING_POOL,
         "mean_rps": MEAN_RPS,
@@ -310,6 +339,7 @@ def run(iterations: int = ITERATIONS) -> bool:
             "jax_rollouts": JAX_ROLLOUTS,
             "wall_s": round(train_wall, 2),
             "best_rollout_reward": state.best_reward,
+            "curve": curve,
             "history": state.history,
         },
         "eval_duration_s": EVAL_DURATION_S,
@@ -317,7 +347,7 @@ def run(iterations: int = ITERATIONS) -> bool:
         "rollout_throughput_a64": thr,
         "claims": claims,
     }
-    write_artifact("BENCH_rl_pool", payload)
+    write_artifact("BENCH_rl_pool", payload, t0)
 
     registered = isinstance(VECTOR_SCHEDULERS.get("rl_pool"), type) and (
         VECTOR_SCHEDULERS["rl_pool"] is RLPoolPolicy
@@ -357,6 +387,13 @@ def run(iterations: int = ITERATIONS) -> bool:
          "batched in-scan rollout collector vs the step-wise env loop "
          "at A=64 (recorded in rollout_throughput_a64.jax_collector)",
          thr["jax_collector"]["speedup_vs_env_loop"] > 1.0),
+        ("training_log_rows", float(curve["iterations"]),
+         "per-iteration loss/entropy/KL curve streamed to "
+         f"{log_name} and summarized in train.curve",
+         curve["iterations"] == iterations
+         and os.path.exists(log_path)
+         and np.isfinite([curve["loss_last"], curve["entropy_last"],
+                          curve["approx_kl_mean"]]).all()),
     ]
     return print_rows("rl", rows, t0)
 

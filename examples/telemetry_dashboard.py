@@ -1,0 +1,177 @@
+"""Walkthrough: the telemetry subsystem end to end, as an ASCII dashboard.
+
+Runs one zoo scenario through the NumPy engine with a
+:class:`~repro.core.sim.Telemetry` hook attached — per-tick recorder,
+structured event log, SLO burn-rate / queue-age / cost-drift monitors —
+then renders what an operator console for the serving pool would show:
+
+  * pool-level sparklines (arrivals, served, violations, queue depths,
+    tier fleets, cost) over the run, with incident spans marked ``!``;
+  * a per-arch arrival/violation timeline for every pool member;
+  * the detected-incident table and the event-log type counts.
+
+Exporters ride along: ``--jsonl`` dumps the raw event log (one JSON
+object per line, reloadable via ``events_from_jsonl`` and exactly
+reconcilable against the run's ledger), ``--prom`` writes a Prometheus
+text-format snapshot of the counters and the run summary.
+
+  PYTHONPATH=src python examples/telemetry_dashboard.py
+  PYTHONPATH=src python examples/telemetry_dashboard.py \\
+      --scenario mmpp_bursts --ticks 900 --policy spot_paragon \\
+      --jsonl /tmp/events.jsonl --prom /tmp/metrics.prom
+  PYTHONPATH=src python examples/telemetry_dashboard.py --require-incident
+"""
+import argparse
+from collections import Counter
+
+import numpy as np
+
+from repro.core.schedulers import VECTOR_SCHEDULERS
+from repro.core.sim import (
+    MonitorConfig,
+    Telemetry,
+    detect_incidents,
+    incidents_table,
+    simulate,
+    uniform_pool_workload,
+)
+from repro.core.workloads import SCENARIO_ZOO
+
+POOL = [
+    "llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b",
+    "whisper-small", "llava-next-mistral-7b", "recurrentgemma-9b",
+    "phi3.5-moe-42b-a6.6b",
+]
+BLOCKS = " ▁▂▃▄▅▆▇█"
+WIDTH = 72
+
+
+def spark(series: np.ndarray, width: int = WIDTH, reduce: str = "mean") -> str:
+    """Downsample a series into a ``width``-column unicode sparkline."""
+    x = np.asarray(series, dtype=float)
+    if x.size == 0:
+        return " " * width
+    edges = np.linspace(0, x.size, width + 1).astype(int)
+    agg = np.maximum if reduce == "max" else None
+    cols = np.array([
+        (x[a:b].max() if reduce == "max" else x[a:b].mean()) if b > a else 0.0
+        for a, b in zip(edges[:-1], edges[1:])
+    ])
+    hi = cols.max()
+    if hi <= 0:
+        return BLOCKS[0] * width
+    lvl = np.ceil(cols / hi * (len(BLOCKS) - 1)).astype(int)
+    return "".join(BLOCKS[i] for i in lvl)
+
+
+def incident_ruler(incidents, ticks: int, width: int = WIDTH) -> str:
+    """One ruler row: ``!`` under every column an incident overlaps."""
+    mask = np.zeros(max(ticks, 1), dtype=bool)
+    for inc in incidents:
+        mask[inc.start_tick: inc.end_tick + 1] = True
+    edges = np.linspace(0, mask.size, width + 1).astype(int)
+    return "".join(
+        "!" if b > a and mask[a:b].any() else "·"
+        for a, b in zip(edges[:-1], edges[1:])
+    )
+
+
+def row(label: str, line: str, note: str = "") -> None:
+    print(f"{label:>22s} │{line}│ {note}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", default="flash_correlated",
+                    choices=sorted(SCENARIO_ZOO))
+    ap.add_argument("--ticks", type=int, default=600)
+    ap.add_argument("--rps", type=float, default=300.0)
+    ap.add_argument("--policy", default="portfolio",
+                    choices=sorted(VECTOR_SCHEDULERS))
+    ap.add_argument("--stride", type=int, default=1,
+                    help="recorder downsampling stride (ticks per row)")
+    ap.add_argument("--jsonl", metavar="PATH",
+                    help="export the event log as JSONL")
+    ap.add_argument("--prom", metavar="PATH",
+                    help="export a Prometheus text-format snapshot")
+    ap.add_argument("--require-incident", action="store_true",
+                    help="exit nonzero unless >= 1 incident is detected")
+    args = ap.parse_args()
+
+    wl = uniform_pool_workload(POOL, strict_frac=0.25)
+    arrivals = SCENARIO_ZOO[args.scenario].build(
+        len(wl), duration_s=args.ticks, mean_rps=args.rps)
+    tel = Telemetry(stride=args.stride)
+    res = simulate(arrivals, wl, VECTOR_SCHEDULERS[args.policy](),
+                   telemetry=tel)
+    rec = tel.recorder
+    incidents = detect_incidents(rec, MonitorConfig())
+
+    s = res.summary()
+    print(f"scenario={args.scenario}  policy={args.policy}  "
+          f"A={len(wl)}  T={args.ticks}  mean_rps={args.rps:g}")
+    print(f"cost_total=${s['cost_total']:.4f}  "
+          f"violation_rate={s['violation_rate']:.3%}  "
+          f"served_vm={s['served_vm']:.0f}  "
+          f"served_burst={s['served_burst']:.0f}  "
+          f"events={len(tel.events)}  incidents={len(incidents)}")
+    print()
+
+    # -- pool-level timelines ---------------------------------------------
+    row("arrivals/s", spark(rec.pool_flow("arrived")),
+        f"peak {rec.pool_flow('arrived').max():.0f}")
+    row("served (vm+burst)", spark(rec.pool_flow("served_vm")
+                                   + rec.pool_flow("served_burst")))
+    viol = rec.pool_flow("viol_strict") + rec.pool_flow("viol_relaxed")
+    row("SLO violations", spark(viol, reduce="max"),
+        f"total {viol.sum():.0f}")
+    n = rec.n_rows
+    for cls in ("strict", "relaxed"):
+        depth = rec.queue_depth[cls][:n].sum(axis=1)
+        age = rec.queue_age_p99[cls][:n].max(axis=1)
+        row(f"queue[{cls}]", spark(depth),
+            f"p99 age max {age.max()}s")
+    for tier in rec.tier_names:
+        active = rec.tier_active[tier][:n].sum(axis=1)
+        if active.any():
+            row(f"fleet[{tier}]", spark(active),
+                f"max {active.max()} instances")
+    row("burst offload/s", spark(rec.pool_flow("served_burst")))
+    row("cost $/tick", spark(rec.tier_cost[:n].sum(axis=1)))
+    if rec.harvest_level[:n].any():
+        row("harvest signal", spark(rec.harvest_level[:n]))
+    row("incidents", incident_ruler(incidents, args.ticks),
+        "(! = inside an incident span)")
+    print()
+
+    # -- per-arch timelines -----------------------------------------------
+    print("per-arch arrivals:")
+    arr = rec.flows["arrived"][:n]
+    for i, load in enumerate(wl):
+        row(load.arch[:22], spark(arr[:, i], width=48),
+            f"{arr[:, i].sum():.0f} req")
+    print()
+
+    # -- incidents + event-log digest --------------------------------------
+    print(incidents_table(incidents))
+    counts = Counter(ev.etype for ev in tel.events)
+    print("event log:",
+          ", ".join(f"{k}={v}" for k, v in counts.most_common(8)),
+          f"(+{len(counts) - 8} more types)" if len(counts) > 8 else "")
+
+    if args.jsonl:
+        n_ev = tel.to_jsonl(args.jsonl)
+        print(f"wrote {n_ev} events -> {args.jsonl}")
+    if args.prom:
+        with open(args.prom, "w") as f:
+            f.write(tel.prometheus_text(res))
+        print(f"wrote Prometheus snapshot -> {args.prom}")
+
+    if args.require_incident and not incidents:
+        print("FAIL: no incidents detected (--require-incident)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

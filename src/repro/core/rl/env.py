@@ -104,7 +104,8 @@ class PoolServingEnv:
                  arrivals: Optional[np.ndarray] = None, *,
                  scenarios: Optional[Sequence[Scenario]] = None,
                  scenario_seed: int = 0,
-                 catalog: Optional[VariantCatalog] = None):
+                 catalog: Optional[VariantCatalog] = None,
+                 telemetry=None):
         assert arrivals is not None or scenarios, (
             "PoolServingEnv needs a fixed arrival matrix or a scenario pool"
         )
@@ -112,6 +113,7 @@ class PoolServingEnv:
         self.n_archs = len(self.workload)
         self.cfg = cfg
         self.catalog = catalog         # opens the variant head's state space
+        self.telemetry = telemetry     # rebound to the fresh sim each reset
         self.base_arrivals = arrivals
         self.scenarios = tuple(scenarios) if scenarios else ()
         self._scenario_rng = np.random.default_rng(scenario_seed)
@@ -148,7 +150,8 @@ class PoolServingEnv:
         # training advances the seed with the episode counter (fixed-
         # arrival envs keep seed 0 — eval stays reproducible)
         self.sim = ServingSim(tr, self.workload, pricing=self.cfg.pricing,
-                              catalog=self.catalog, seed=self._episode)
+                              catalog=self.catalog, seed=self._episode,
+                              telemetry=self.telemetry)
         return self._observe(first=True)
 
     def _observe(self, first: bool = False) -> np.ndarray:
@@ -197,7 +200,8 @@ class ServingEnv:
     def __init__(self, cfg: EnvConfig, trace: Optional[np.ndarray] = None, *,
                  scenarios: Optional[Sequence[Scenario]] = None,
                  scenario_seed: int = 0,
-                 catalog: Optional[VariantCatalog] = None):
+                 catalog: Optional[VariantCatalog] = None,
+                 telemetry=None):
         assert trace is not None or scenarios, (
             "ServingEnv needs a fixed trace or a scenario pool"
         )
@@ -210,6 +214,7 @@ class ServingEnv:
             scenarios=scenarios,
             scenario_seed=scenario_seed,
             catalog=catalog,
+            telemetry=telemetry,
         )
 
     @property

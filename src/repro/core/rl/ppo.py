@@ -25,7 +25,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import List, Tuple, Union
+from typing import List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +38,7 @@ from repro.core.rl.env import (
     ServingEnv,
 )
 from repro.core.sim import jax_engine
+from repro.core.sim.telemetry import JsonlWriter
 
 
 @dataclass(frozen=True)
@@ -243,8 +244,13 @@ def _loss(params, batch, clip_eps, entropy_coef, value_coef):
     pi_loss = -jnp.mean(jnp.minimum(unclipped, clipped))
     v_loss = jnp.mean((values - batch["returns"]) ** 2)
     entropy = -jnp.mean(jnp.sum(jnp.exp(logp_all) * logp_all, axis=-1))
+    # the standard sampled KL(old || new) estimator over the batch — the
+    # health signal telemetry tracks per iteration (a spike means the
+    # clipped surrogate stopped trusting the rollout distribution)
+    approx_kl = jnp.mean(batch["logp_old"] - logp)
     total = pi_loss + value_coef * v_loss - entropy_coef * entropy
-    return total, {"pi_loss": pi_loss, "v_loss": v_loss, "entropy": entropy}
+    return total, {"pi_loss": pi_loss, "v_loss": v_loss, "entropy": entropy,
+                   "approx_kl": approx_kl}
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -287,6 +293,7 @@ def train_ppo_pool(
     *,
     verbose: bool = False,
     jax_rollouts: bool = False,
+    log_path: Optional[str] = None,
 ) -> PPOState:
     """Train the pool controller with batched ``[T, A]`` rollouts.
 
@@ -295,6 +302,11 @@ def train_ppo_pool(
     full episode in a single jitted dispatch (``cfg.rollout_len`` is
     superseded by the episode length on that path); the update math is
     identical.
+
+    ``log_path`` streams the per-iteration training curve (reward,
+    loss components, entropy, approx-KL — the fields ``history`` keeps)
+    to a JSONL file as it trains, e.g.
+    ``artifacts/rl/training_log.jsonl``.
     """
     if isinstance(env, ServingEnv):
         env = env.pool
@@ -310,6 +322,7 @@ def train_ppo_pool(
     history: List[dict] = []
     ep_reward, ep_rewards = 0.0, []
     best_reward, best_params = float("-inf"), params
+    log = JsonlWriter(log_path) if log_path else None
 
     for it in range(cfg.iterations):
         if jax_rollouts:
@@ -361,6 +374,7 @@ def train_ppo_pool(
         }
         idx = np.arange(T * A)
         rng = np.random.default_rng(cfg.seed + it)
+        mb_stats = []          # device scalars; one host sync per iteration
         for _ in range(cfg.epochs):
             rng.shuffle(idx)
             for mb in np.array_split(idx, cfg.minibatches):
@@ -368,6 +382,11 @@ def train_ppo_pool(
                 params, opt_state, loss, aux = ppo_update(
                     params, opt_state, batch, cfg
                 )
+                mb_stats.append(jnp.stack([
+                    loss, aux["pi_loss"], aux["v_loss"], aux["entropy"],
+                    aux["approx_kl"],
+                ]))
+        it_mean = np.asarray(jnp.stack(mb_stats)).mean(axis=0)
 
         roll_r = float(rew_buf.sum())
         if roll_r > best_reward:
@@ -382,16 +401,27 @@ def train_ppo_pool(
                 "iter": it,
                 "rollout_reward": roll_r,
                 "mean_episode_reward": mean_ep,
+                # last-minibatch values (seed-era fields), plus the
+                # iteration means the telemetry curve tracks
                 "loss": float(loss),
                 "entropy": float(aux["entropy"]),
+                "loss_mean": float(it_mean[0]),
+                "pi_loss": float(it_mean[1]),
+                "v_loss": float(it_mean[2]),
+                "entropy_mean": float(it_mean[3]),
+                "approx_kl": float(it_mean[4]),
             }
         )
+        if log is not None:
+            log.write(history[-1])
         if verbose and it % 5 == 0:
             print(
                 f"[ppo] it={it:3d} rollout_r={roll_r:9.4f} "
                 f"ep_r={mean_ep:9.3f} H={history[-1]['entropy']:.3f}",
                 flush=True,
             )
+    if log is not None:
+        log.close()
     return PPOState(
         params=best_params,
         final_params=params,

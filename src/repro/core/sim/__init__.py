@@ -10,12 +10,18 @@ Subsystems, each its own module, composed by the engine's tick pipeline
                 interface (a new tier type is one subclass)
   accounting  — the cost / violation / over-provision ledger
   engine      — :class:`ServingSim` (the tick loop) and ``simulate``
+  telemetry   — per-tick recorder, structured event log (ledger-
+                reconcilable), burn-rate monitors, exporters
   reference   — the seed per-arch loop, kept as the golden oracle
 
 ``repro.core.simulator`` re-exports this surface, so seed-era imports
 keep working unchanged.
 """
-from repro.core.sim.accounting import Ledger, SimResult  # noqa: F401
+from repro.core.sim.accounting import (  # noqa: F401
+    SUMMARY_KEY_DOCS,
+    Ledger,
+    SimResult,
+)
 from repro.core.sim.engine import ArchView, ServingSim, simulate  # noqa: F401
 from repro.core.sim.fleet import (  # noqa: F401
     BurstTier,
@@ -28,6 +34,16 @@ from repro.core.sim.fleet import (  # noqa: F401
 )
 from repro.core.sim.queues import BucketQueue, QueueArray  # noqa: F401
 from repro.core.sim.reference import ReferenceSim, simulate_reference  # noqa: F401
+from repro.core.sim.telemetry import (  # noqa: F401
+    EVENT_TYPES,
+    Incident,
+    MonitorConfig,
+    Telemetry,
+    TimeSeriesRecorder,
+    detect_incidents,
+    incidents_table,
+    reconcile_events,
+)
 from repro.core.sim.types import (  # noqa: F401
     CLASSES,
     OFFLOAD_BLIND,
@@ -42,6 +58,7 @@ from repro.core.sim.types import (  # noqa: F401
     Policy,
     PoolAction,
     PoolObs,
+    TelemetryEvent,
     Variant,
     VariantCatalog,
     VectorPolicy,

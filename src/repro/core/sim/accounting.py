@@ -14,6 +14,37 @@ from typing import Dict, List
 
 import numpy as np
 
+#: What every :meth:`SimResult.summary` key means (docs/TELEMETRY.md is
+#: generated against this; the coverage test keeps the two in sync).
+#: ``cost_<tier>`` covers the dynamic keys tiers beyond the canonical
+#: three post under their own names (``cost_harvest``, ``cost_remote``).
+SUMMARY_KEY_DOCS: Dict[str, str] = {
+    "cost_total": "total $ across every tier (reserved + spot + burst "
+                  "+ any cost_<tier> entries)",
+    "cost_reserved": "$ accrued by the reserved / multi-region reserved tier",
+    "cost_spot": "$ accrued by the spot tier",
+    "cost_burst": "$ paid to the serverless burst backend (per-request "
+                  "premium pricing)",
+    "cost_<tier>": "$ accrued by a non-canonical tier, keyed by its posted "
+                   "name — present iff that tier was ever live in the run",
+    "preemptions": "spot instances reclaimed by the provider mid-run",
+    "violation_rate": "SLO-violating requests / total arrivals "
+                      "(late-served + dropped + expired-at-end)",
+    "violations_strict": "violating requests from the strict latency class",
+    "served_vm": "requests answered by pool VMs (includes late ones; "
+                 "dropped requests are counted served-late here)",
+    "served_burst": "requests offloaded to and answered by the burst tier",
+    "overprovision_ratio": "idle chip-seconds / needed chip-seconds "
+                           "(the paper's over-provisioning metric)",
+    "chip_seconds": "total provisioned chip-seconds across the run",
+    "mean_accuracy": "answered-request-weighted mean accuracy of the "
+                     "serving variants (variant-aware runs only)",
+    "acc_violation_rate": "answered requests below their stream's accuracy "
+                          "floor / all answered (variant-aware runs only)",
+    "variant_swaps": "completed runtime model-variant swaps "
+                     "(variant-aware runs only)",
+}
+
 
 @dataclass
 class SimResult:

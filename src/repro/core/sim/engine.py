@@ -195,6 +195,7 @@ class ServingSim:
         warm_start: bool = True,
         seed: int = 0,
         catalog: Optional[VariantCatalog] = None,
+        telemetry: Optional["Telemetry"] = None,
     ):
         arr = np.asarray(trace, dtype=np.float64)
         self.pricing = pricing
@@ -409,6 +410,15 @@ class ServingSim:
                 1, np.ceil(t0_rates / self.eff_throughput)
             ).astype(np.int64)
 
+        # observability: every emission below is gated on `telemetry is
+        # not None`, so the disabled engine is bit-identical to (and as
+        # fast as) the pre-telemetry one
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.bind(self)
+            for tier in (self.reserved, *self.aux_tiers.values(), self.burst):
+                tier.telemetry = telemetry
+
     # ------------------------------------------------------------------
     def _refresh_variant_state(self) -> None:
         """Re-gather the active variant's effective serving vectors.
@@ -481,6 +491,8 @@ class ServingSim:
         self.ledger.add_arrivals(float(rates.sum()))
         self._rates = rates
         self.arrived_arch += rates
+        if self.telemetry is not None:
+            self.telemetry.on_arrivals(tick, rates)
 
         # variant observation: neighbor / in-flight service-rate ratios
         # are what swap-aware policies need to judge (and pre-provision
@@ -658,15 +670,19 @@ class ServingSim:
         # served), then new requests enter the pipeline — the arch keeps
         # serving at the old variant's rate until theirs completes
         # (single-variant world: every request is a held/cancelled no-op)
+        tel = self.telemetry
         if self._variants_live:
             done_swaps = self.swap.pop_ready(tick)
             if done_swaps.any():
                 led.add_variant_swaps(int(done_swaps.sum()))
                 self._refresh_variant_state()
+                if tel is not None:
+                    tel.on_swap_landed(tick, done_swaps)
             if variant_target is not None and (variant_target >= 0).any():
-                self.swap.request(
-                    tick, np.minimum(variant_target, self.var_n - 1)
-                )
+                req = np.minimum(variant_target, self.var_n - 1)
+                started = self.swap.request(tick, req)
+                if tel is not None:
+                    tel.on_swap_request(tick, started, req)
 
         # provision: each tier runs its events + pipeline toward its
         # target.  Aux tiers activate lazily — an untargeted tier is
@@ -726,6 +742,8 @@ class ServingSim:
         led.add_violations(float(late_s.sum() + late_r.sum()), float(late_s.sum()))
         self.served_vm_arch += served
         self.violations_arch += late_s + late_r
+        if tel is not None:
+            tel.on_serve(tick, served, late_s, late_r)
         self.last_util = np.where(
             capacity > 0, served / np.where(capacity > 0, capacity, 1.0), 1.0
         )
@@ -768,6 +786,8 @@ class ServingSim:
                 self.dropped_arch += dropped_a
                 self.violations_arch += dropped_a
                 answered += dropped_a
+                if tel is not None:
+                    tel.on_drop(tick, strict, dropped_a)
 
         # delivered accuracy: every answered request carries the active
         # variant's accuracy; mass answered below the stream's floor is
@@ -783,18 +803,36 @@ class ServingSim:
                 led.add_acc_violations(float(acc_viol.sum()))
         else:
             acc_viol = self._zero_arch
+        if tel is not None:
+            tel.on_accuracy(tick, acc_w, acc_viol)
 
         # accounting (cost attributed per arch as each tier posts — by
         # name, at the active variant's chip footprint; a new tier needs
         # no ledger changes beyond its registration above)
         chip_s = self.reserved.account(led, self.eff_chips)
         self.cost_arch += chip_s * self.reserved.price_per_chip_s()
+        if tel is not None:
+            tel.on_tier_cost(
+                tick, "reserved",
+                float(chip_s.sum()) * self.reserved.price_per_chip_s())
         for name, tier in self.aux_tiers.items():
             if self._tier_live[name]:
                 t_chip_s = tier.account(led, self.eff_chips)
                 self.cost_arch += t_chip_s * tier.price_per_chip_s()
                 chip_s = chip_s + t_chip_s
+                if tel is not None:
+                    tel.on_tier_cost(
+                        tick, name,
+                        float(t_chip_s.sum()) * tier.price_per_chip_s())
         led.add_capacity(chip_s, self._rates, self.eff_throughput, self.eff_chips)
+        if tel is not None:
+            # mirror add_capacity's arithmetic exactly (reconciliation
+            # compares these event magnitudes `==` against the ledger)
+            need = np.ceil(self._rates / self.eff_throughput) * self.eff_chips
+            tel.on_capacity(
+                tick, float(chip_s.sum()), float(need.sum()),
+                float(np.maximum(chip_s - need, 0.0).sum()))
+            tel.end_tick(self, tick)
 
         self.tick += 1
         if self.done:
@@ -820,6 +858,8 @@ class ServingSim:
             self.ledger.add_violations(late, late if strict else 0.0)
             self.violations_arch += late_a
             self.expired_end_arch += late_a
+            if self.telemetry is not None:
+                self.telemetry.on_expired(end, strict, late_a)
 
     def per_arch_counts(self) -> Dict[str, np.ndarray]:
         """Per-arch flow totals so far, each an ``[A]`` copy.
@@ -866,6 +906,7 @@ def simulate(
     warm_start: bool = True,                 # fleet starts sized for t=0 load
     record_timeline: bool = False,
     catalog: Optional[VariantCatalog] = None,
+    telemetry: Optional["Telemetry"] = None,
 ) -> SimResult:
     """Closed-loop run: the policy drives :class:`ServingSim` over the trace.
 
@@ -879,7 +920,7 @@ def simulate(
     """
     sim = ServingSim(
         trace, workload, pricing=pricing, prewarm=prewarm,
-        warm_start=warm_start, catalog=catalog,
+        warm_start=warm_start, catalog=catalog, telemetry=telemetry,
     )
     vectorized = bool(getattr(policy, "vectorized", False))
     while not sim.done:

@@ -197,8 +197,10 @@ class SwapPipeline:
             self.completed += int(done.sum())
         return done
 
-    def request(self, tick: int, target: np.ndarray) -> None:
-        """Apply per-arch swap requests (``target[a] = -1`` means hold)."""
+    def request(self, tick: int, target: np.ndarray) -> np.ndarray:
+        """Apply per-arch swap requests (``target[a] = -1`` means hold);
+        returns the boolean mask of swaps that newly entered the
+        pipeline (telemetry's swap-request events)."""
         t = np.asarray(target, dtype=np.int64)
         cancel = (t >= 0) & (t == self.current)
         self.pending[cancel] = -1
@@ -206,6 +208,7 @@ class SwapPipeline:
         if start.any():
             self.pending[start] = t[start]
             self.ready_at[start] = tick + self.lat
+        return start
 
 
 # ---------------------------------------------------------------------------
@@ -222,6 +225,11 @@ class ResourceTier:
     """
 
     name = "reserved"
+
+    #: optional :class:`~repro.core.sim.telemetry.Telemetry` hook the
+    #: engine attaches; ``None`` (the default) keeps every tick on the
+    #: pre-telemetry fast path
+    telemetry = None
 
     def __init__(self, n_archs: int, pricing: FleetPricing):
         self.pricing = pricing
@@ -251,21 +259,29 @@ class ResourceTier:
         as a function of time, not of usage history (default: none)."""
 
     def set_target(self, tick: int, target: np.ndarray) -> None:
-        self.active += self.pipeline.pop_ready(tick)
+        tel = self.telemetry
+        ready = self.pipeline.pop_ready(tick)
+        self.active += ready
         in_flight = self.active + self.pipeline.total
         grow = np.maximum(target - in_flight, 0)
         if grow.any():
             self.pipeline.launch(tick, grow)
         shrink = in_flight - target
+        cancel = released = None
         if (shrink > 0).any():
             cancel = np.clip(np.minimum(self.pipeline.total, shrink), 0, None)
             if cancel.any():
                 self.pipeline.cancel_newest(tick, cancel)
-            self.active = np.where(
+            active = np.where(
                 shrink > 0,
                 np.minimum(self.active, np.maximum(target, 0)),
                 self.active,
             )
+            if tel is not None:
+                released = self.active - active
+            self.active = active
+        if tel is not None:
+            tel.on_provision(tick, self.name, ready, grow, cancel, released)
 
     def account(self, ledger: Ledger, chips_per_instance: np.ndarray) -> np.ndarray:
         """Bill held capacity; returns this tier's chip-seconds per arch."""
@@ -318,6 +334,9 @@ class SpotTier(ResourceTier):
             reclaimed = binomial_from_uniform(self.active, p_reclaim, u[0])
             self.active -= reclaimed
             ledger.add_preemptions(int(reclaimed.sum()))
+            if self.telemetry is not None:
+                self.telemetry.on_reclaim(
+                    tick, "spot_reclaim", self.name, reclaimed)
         if self.pipeline.total.any():
             # in-flight launches are NOT immune: the provider reclaims
             # provisioning slices at the same rate, so a policy cannot
@@ -328,6 +347,9 @@ class SpotTier(ResourceTier):
             lost = binomial_from_uniform(self.pipeline.total, p_reclaim, u[1])
             self.pipeline.cancel_newest(tick, lost)
             ledger.add_preemptions(int(lost.sum()))
+            if self.telemetry is not None:
+                self.telemetry.on_reclaim(
+                    tick, "spot_reclaim_pending", self.name, lost)
 
 
 # ---------------------------------------------------------------------------
@@ -391,11 +413,17 @@ class HarvestVMTier(ResourceTier):
         if evicted.any():
             self.active -= evicted
             ledger.add_preemptions(int(evicted.sum()))
+            if self.telemetry is not None:
+                self.telemetry.on_reclaim(
+                    tick, "harvest_evict", self.name, evicted)
         # in-flight launches above the remaining room never materialize
         # (cancelled, not evicted: they were never running)
         over = np.maximum(self.active + self.pipeline.total - ceiling, 0)
         if over.any():
             self.pipeline.cancel_newest(tick, over)
+            if self.telemetry is not None:
+                self.telemetry.on_reclaim(
+                    tick, "harvest_cancel", self.name, over)
 
     def set_target(self, tick: int, target: np.ndarray) -> None:
         # the provider only grants capacity under the harvested ceiling
@@ -432,6 +460,9 @@ class BurstTier:
     pool has not seen the model within the idle timeout)."""
 
     name = "burst"
+
+    #: optional telemetry hook, attached by the engine (see ResourceTier)
+    telemetry = None
 
     def __init__(
         self,
@@ -471,11 +502,16 @@ class BurstTier:
         lat_warm = self.pricing.burst_spinup_s + self.lat_b1
         first = np.minimum(counts, 1.0)
         viol = first * (lat_first > slo_s) + (counts - first) * (lat_warm > slo_s)
+        cost_vec = self.cost_per_request * counts
         ledger.add_burst(
-            cost=float((self.cost_per_request * counts).sum()),
+            cost=float(cost_vec.sum()),
             served=float(counts.sum()),
             violations=float(viol.sum()),
             strict=strict,
         )
+        if self.telemetry is not None:
+            cold = (tick - self.last_used) > self.pricing.burst_idle_timeout_s
+            self.telemetry.on_cold_start(tick, cold & (counts > 0))
+            self.telemetry.on_burst(tick, strict, counts, viol, cost_vec)
         self.last_used = np.where(counts > 0, float(tick), self.last_used)
         return viol

@@ -76,6 +76,7 @@ recompiling and one trace serves every workload of the same shape.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
@@ -98,6 +99,7 @@ from repro.core.rl.policy import (
     _fallback_params,
     policy_logits,
 )
+from repro.core.sim import telemetry
 from repro.core.sim.engine import ServingSim
 from repro.core.sim.fleet import (
     BINOMIAL_KMAX,
@@ -112,6 +114,7 @@ __all__ = [
     "binomial_from_uniform_jnp",
     "build_sim_inputs",
     "make_runner",
+    "note_runner_use",
     "run_scenario",
     "run_grid",
     "runner_trace_count",
@@ -657,6 +660,15 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply):
         "over": jnp.maximum(chip_all - need, 0.0).sum(),
         "harv_live": harv_live,
         "rem_live": rem_live,
+        # fleet / queue gauges for the telemetry trajectory (exact zeros
+        # contribute nothing in "sum" mode; "stack" mode exposes the
+        # per-tick series run_scenario(record_trajectory=True) returns)
+        "n_res": res_active,
+        "n_spot": spot_active,
+        "n_harv": harv_active,
+        "n_rem": rem_active,
+        "queue_strict": qs_buf[:, -1],
+        "queue_relaxed": qr_buf[:, -1],
         **extras,
     }
     return new_state, ys
@@ -858,6 +870,14 @@ def _split_keys(key, n: int) -> np.ndarray:
 _RUNNERS: Dict[tuple, Any] = {}
 
 
+#: per-tick *level* series (fleet sizes, queue depths) exposed only by
+#: the ``mode="stack"`` trajectory path — excluded from the in-graph
+#: "sum" reduction, where their totals would be meaningless tick-seconds
+GAUGE_KEYS = frozenset(
+    ("n_res", "n_spot", "n_harv", "n_rem", "queue_strict", "queue_relaxed")
+)
+
+
 def make_runner(policy_apply, mode: str = "sum"):
     """Build ``run(statics, state0, xs) -> out`` around one policy.
 
@@ -877,7 +897,14 @@ def make_runner(policy_apply, mode: str = "sum"):
             "expired_r": _late_mass(final.qr_buf, statics["fin_r"]),
         }
         if mode == "sum":
-            out["totals"] = jax.tree.map(lambda a: a.sum(axis=0), ys)
+            # summing the telemetry gauges is meaningless (they are
+            # levels, not flows) — dropping them here lets XLA dead-code
+            # the per-tick stacking, keeping scenario evaluation at its
+            # pre-telemetry throughput
+            out["totals"] = jax.tree.map(
+                lambda a: a.sum(axis=0),
+                {k: v for k, v in ys.items() if k not in GAUGE_KEYS},
+            )
         else:
             out["ys"] = ys
         return out
@@ -909,6 +936,37 @@ def runner_trace_count(policy: str, mode: str = "sum",
     recompile guard: repeated same-shape runs must report 1)."""
     fn = _RUNNERS.get((policy, mode, batched))
     return 0 if fn is None else fn._cache_size()
+
+
+# trace counts last observed per runner key, and the keys already warned
+# about — a runner retracing for a key we've seen is a silent recompile
+# (a perf bug), surfaced once per key and counted in the telemetry
+# counters (`repro_jax_runner_traces_total{...}` in the Prometheus dump)
+_TRACE_SEEN: Dict[tuple, int] = {}
+_TRACE_WARNED: set = set()
+
+
+def note_runner_use(policy: str, mode: str = "sum",
+                    batched: bool = False) -> int:
+    """Record a runner dispatch: export its trace count as a telemetry
+    counter and warn (once per key) if it retraced for an already-seen
+    ``(policy, mode, batched)`` key.  Returns the current trace count."""
+    key = (policy, mode, batched)
+    n = runner_trace_count(policy, mode, batched)
+    telemetry.set_global_counter(
+        f'jax_runner_traces_total{{policy="{policy}",mode="{mode}",'
+        f'batched="{int(batched)}"}}', n)
+    prev = _TRACE_SEEN.get(key)
+    if prev is not None and n > prev and key not in _TRACE_WARNED:
+        _TRACE_WARNED.add(key)
+        warnings.warn(
+            f"jax_engine runner retraced for already-seen key {key}: "
+            f"{n} traces cached (was {prev}) — same-shape runs should "
+            "hit the jit cache; check for dtype/shape drift in inputs",
+            RuntimeWarning, stacklevel=3,
+        )
+    _TRACE_SEEN[key] = max(n, prev or 0)
+    return n
 
 
 # ---------------------------------------------------------------------------
@@ -1004,10 +1062,17 @@ def run_scenario(
     seed: int = 0,
     prewarm: bool = True,
     warm_start: bool = True,
+    record_trajectory: bool = False,
 ) -> dict:
     """One scenario through the jitted scan; returns ``{"summary",
     "per_arch", "raw"}`` with the summary shaped exactly like
-    ``SimResult.summary()`` from the NumPy engine."""
+    ``SimResult.summary()`` from the NumPy engine.
+
+    ``record_trajectory=True`` runs the ``mode="stack"`` runner instead
+    and adds a ``"trajectory"`` entry: the per-tick ``[T, ...]`` series
+    of every scan output (served / burst / violation flows, per-tier
+    cost and fleet gauges, queue totals) — the JAX-side counterpart of
+    the NumPy engine's telemetry recorder."""
     pol = JAX_POLICIES[policy]
     statics, state0, xs = build_sim_inputs(
         arrivals, workload, pricing=pricing, seed=seed, prewarm=prewarm,
@@ -1015,9 +1080,20 @@ def run_scenario(
         needs_key=pol.needs_key,
     )
     statics["policy"] = pol.default_params() if params is None else params
+    mode = "stack" if record_trajectory else "sum"
     with enable_x64():
-        out = _tree_to_host(_get_runner(policy)(statics, state0, xs))
-    return _assemble(out, np.asarray(arrivals, dtype=np.float64))
+        out = _tree_to_host(_get_runner(policy, mode=mode)(statics, state0, xs))
+    note_runner_use(policy, mode)
+    trajectory = None
+    if record_trajectory:
+        trajectory = out.pop("ys")
+        # reduce the stacked series host-side so _assemble sees the same
+        # shape the in-graph "sum" reduction produces
+        out["totals"] = {k: v.sum(axis=0) for k, v in trajectory.items()}
+    result = _assemble(out, np.asarray(arrivals, dtype=np.float64))
+    if record_trajectory:
+        result["trajectory"] = trajectory
+    return result
 
 
 def run_grid(
@@ -1074,6 +1150,7 @@ def run_grid(
         out = _tree_to_host(
             _get_runner(policy, batched=True)(statics, policy_b, state0_b, xs_b)
         )
+    note_runner_use(policy, batched=True)
     return [
         _assemble(_tree_index(out, i), arrivals_batch[i]) for i in range(B)
     ]

@@ -125,6 +125,18 @@ class QueueArray:
     def totals(self) -> np.ndarray:
         return self.total
 
+    def age_quantile(self, tick: int, q: float = 0.99) -> np.ndarray:
+        """Per-arch ``q``-quantile of queued-request ages at this tick
+        (seconds; 0 for empty queues) — the telemetry recorder's
+        queue-age gauge.  The quantile age is the smallest age holding
+        at least ``q`` of the arch's queued mass at or below it."""
+        counts = self.buf[:, self._cols[tick % self.window]]   # oldest->newest
+        total = counts.sum(axis=1)
+        by_age = counts[:, ::-1]                               # ages 0..W-1
+        cum = np.cumsum(by_age, axis=1)
+        k = np.argmax(cum >= (q * total)[:, None], axis=1)
+        return np.where(total > 0, k, 0)
+
     def late_mask_for(self, slack: np.ndarray) -> np.ndarray:
         """An alternative ``[A, W]`` lateness mask for ``serve``: a served
         request is late when its age exceeds ``slack[a]`` (which may be

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,6 +28,31 @@ CLASSES = (STRICT, RELAXED)
 #: ``Action.offload`` modes, index == integer code in ``PoolAction.offload``
 OFFLOAD_MODES = ("none", "blind", "slack_aware")
 OFFLOAD_NONE, OFFLOAD_BLIND, OFFLOAD_SLACK_AWARE = range(3)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry event record.
+# ---------------------------------------------------------------------------
+class TelemetryEvent(NamedTuple):
+    """One structured observability record emitted by the engine or a tier.
+
+    ``arch`` is the pool index the event concerns (``-1`` = pool-level),
+    ``tier`` the resource tier name (``""`` when not tier-scoped), ``cls``
+    the latency class (``"strict"``/``"relaxed"``, ``""`` when classless).
+    ``magnitude`` carries the event's primary quantity (requests, instances,
+    chip-seconds — see :data:`repro.core.sim.telemetry.EVENT_TYPES`) and
+    ``cost`` its dollar amount when one applies.  The event stream is the
+    ground truth the :class:`~repro.core.sim.accounting.Ledger` is
+    reconciled against: summing event magnitudes in tick order reproduces
+    every ledger total bit-exactly."""
+
+    tick: int
+    etype: str
+    arch: int = -1
+    tier: str = ""
+    cls: str = ""
+    magnitude: float = 1.0
+    cost: float = 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,18 @@ On full runs the trained parameters are published to
 ``artifacts/rl/pool_policy.json`` (the default checkpoint a bare
 ``RLPoolPolicy()`` loads); ``BENCH_SMALL=1`` smoke runs shrink the
 training and evaluation sizes and do NOT overwrite the checkpoint.
+
+PR 8 adds the ``claims.fleet_scale`` section — the ROADMAP fleet-scale
+generalization study.  Training goes *full-zoo*: every PPO iteration
+collects all S zoo scenarios as one ``[S, T, A]`` batched scan dispatch
+(:func:`repro.core.rl.ppo.collect_rollouts_jax_zoo`) instead of one
+sampled scenario, so each gradient step sees the whole distribution.
+Controllers trained full-zoo at A=8 and A=16 are then deployed
+zero-shot on A=64 and A=256 pools with the variant catalog attached
+and the spot head live (the full 108-action space acting on real
+state), head-to-head against classical baselines including the
+variant-aware ``infaas_variant`` — train-small / deploy-fleet is the
+self-managed-at-scale property the paper's §V sketches.
 """
 from __future__ import annotations
 
@@ -45,7 +57,12 @@ from repro.core.rl import (
     train_ppo_pool,
 )
 from repro.core.schedulers import VECTOR_SCHEDULERS
-from repro.core.sim import replicate_pool, simulate, uniform_pool_workload
+from repro.core.sim import (
+    VariantCatalog,
+    replicate_pool,
+    simulate,
+    uniform_pool_workload,
+)
 from repro.core.workloads import SCENARIO_ZOO
 
 PENALTY = 0.02                     # $ per violated request (blended objective)
@@ -81,6 +98,15 @@ CLASSICAL = ("reactive", "util_aware", "exascale", "mixed", "paragon",
 # throughput delta is measured and recorded in the artifact.
 _jr_env = os.environ.get("RL_JAX_ROLLOUTS", "")
 JAX_ROLLOUTS = _jr_env == "1" if _jr_env else not BENCH_SMALL
+# fleet-scale generalization study (claims.fleet_scale): full-zoo
+# training pools, zero-shot deployment pools, and the budget for the
+# study's own training runs (the A=16 controller always trains here;
+# the A=8 one reuses the main run when that run was full-zoo)
+FLEET_TRAIN_POOLS = (8, 16)
+FLEET_EVAL_POOLS = (64, 256)
+FLEET_ITERATIONS = 2 if BENCH_SMALL else 96
+FLEET_EVAL_SCENARIOS = ("mmpp_bursts", "flash_anti")
+FLEET_CLASSICAL = ("reactive", "paragon", "infaas_variant")
 
 
 def _objective(summary: dict, total_requests: float) -> float:
@@ -128,6 +154,125 @@ def _rollout_throughput_64(params, cfg: EnvConfig) -> dict:
     return out
 
 
+def _train_full_zoo(A: int, iterations: int, seed: int) -> tuple:
+    """One full-zoo-trained controller at pool size ``A``: every PPO
+    iteration collects the whole ``SCENARIO_ZOO`` as one ``[S, T, A]``
+    batched scan dispatch (``collect_rollouts_jax_zoo``).  Per-arch
+    demand is held at the A=8 training level."""
+    wl = (uniform_pool_workload(SERVING_POOL, strict_frac=STRICT_FRAC)
+          if A == len(SERVING_POOL)
+          else replicate_pool(SERVING_POOL, A, strict_frac=STRICT_FRAC))
+    rps = MEAN_RPS * A / len(SERVING_POOL)
+    cfg = EnvConfig(strict_frac=STRICT_FRAC, mean_rps=rps,
+                    duration_s=TRAIN_DURATION_S, violation_penalty=PENALTY)
+    env = PoolServingEnv(wl, cfg, scenarios=list(SCENARIO_ZOO.values()),
+                         scenario_seed=seed)
+    t0 = time.perf_counter()
+    state = train_ppo_pool(
+        env,
+        PPOConfig(iterations=iterations, rollout_len=TRAIN_DURATION_S,
+                  entropy_coef=ENTROPY_COEF, seed=seed),
+        jax_rollouts=True, full_zoo=True,
+    )
+    hist = state.history
+    info = {
+        "pool_size": A, "mean_rps": rps, "iterations": iterations,
+        "full_zoo": True, "zoo_size": len(SCENARIO_ZOO),
+        "wall_s": round(time.perf_counter() - t0, 2),
+        "reward_first": hist[0]["rollout_reward"],
+        "reward_last": hist[-1]["rollout_reward"],
+        "reward_best": state.best_reward,
+    }
+    return state.params, info
+
+
+def _fleet_generalization(state) -> dict:
+    """The fleet-scale generalization study (ROADMAP open item 6):
+    full-zoo-trained A=8 / A=16 controllers deployed zero-shot on
+    A=64 / A=256 pools with the variant catalog attached and the spot
+    head live — the full 108-action joint space acting on real state —
+    against classical baselines including the variant-aware
+    ``infaas_variant``.  The ratio fields report the gap win or lose;
+    the claim rows only require the study to be complete and finite."""
+    params: Dict[str, dict] = {}
+    trained: Dict[str, dict] = {}
+    for A in FLEET_TRAIN_POOLS:
+        if A == len(SERVING_POOL) and JAX_ROLLOUTS:
+            # the main training run above IS a full-zoo A=8 controller
+            # (and a better-trained one than the study budget buys)
+            params[str(A)] = state.params
+            trained[str(A)] = {
+                "pool_size": A, "source": "main_training",
+                "iterations": len(state.history), "full_zoo": True,
+                "zoo_size": len(SCENARIO_ZOO),
+                "reward_best": state.best_reward,
+            }
+        else:
+            params[str(A)], trained[str(A)] = _train_full_zoo(
+                A, FLEET_ITERATIONS, seed=20 + A
+            )
+    out = {
+        "train": trained,
+        "eval_scenarios": list(FLEET_EVAL_SCENARIOS),
+        "classical": list(FLEET_CLASSICAL),
+        "variant_catalog": True,
+        "eval_duration_s": EVAL_DURATION_S,
+        "eval": {},
+        "median_obj_ratio": {},
+    }
+    for A in FLEET_EVAL_POOLS:
+        wlA = replicate_pool(SERVING_POOL, A, strict_frac=STRICT_FRAC)
+        catalog = VariantCatalog.for_workload(wlA)
+        rpsA = MEAN_RPS * A / len(SERVING_POOL)
+        grid: Dict[str, dict] = {}
+        ratios: List[float] = []
+        for name in FLEET_EVAL_SCENARIOS:
+            sc = SCENARIO_ZOO[name]
+            arrivals = sc.build(
+                A, seed=sc.seed + EVAL_SEED_OFFSET + 2,
+                duration_s=EVAL_DURATION_S, mean_rps=rpsA,
+            )
+            cell: Dict[str, dict] = {}
+            for pol_name in FLEET_CLASSICAL:
+                res = simulate(arrivals, wlA,
+                               VECTOR_SCHEDULERS[pol_name](),
+                               catalog=catalog)
+                cell[pol_name] = {
+                    **res.summary(),
+                    "objective": round(
+                        _objective(res.summary(), res.total_requests), 4
+                    ),
+                }
+            for At in FLEET_TRAIN_POOLS:
+                res = simulate(
+                    arrivals, wlA,
+                    RLPoolPolicy(params=params[str(At)], greedy=True),
+                    catalog=catalog,
+                )
+                cell[f"rl_a{At}"] = {
+                    **res.summary(),
+                    "objective": round(
+                        _objective(res.summary(), res.total_requests), 4
+                    ),
+                }
+            best = min(FLEET_CLASSICAL, key=lambda p: cell[p]["objective"])
+            rl_best = min(
+                (f"rl_a{At}" for At in FLEET_TRAIN_POOLS),
+                key=lambda k: cell[k]["objective"],
+            )
+            cell["best_classical"] = best
+            cell["rl_best"] = rl_best
+            cell["rl_obj_over_best_classical"] = round(
+                cell[rl_best]["objective"]
+                / max(cell[best]["objective"], 1e-9), 4
+            )
+            ratios.append(cell["rl_obj_over_best_classical"])
+            grid[name] = cell
+        out["eval"][str(A)] = grid
+        out["median_obj_ratio"][str(A)] = float(np.median(ratios))
+    return out
+
+
 def run(iterations: int = ITERATIONS) -> bool:
     t0 = time.perf_counter()
     wl = uniform_pool_workload(SERVING_POOL, strict_frac=STRICT_FRAC)
@@ -147,6 +292,10 @@ def run(iterations: int = ITERATIONS) -> bool:
         PPOConfig(iterations=iterations, rollout_len=TRAIN_DURATION_S,
                   entropy_coef=ENTROPY_COEF, seed=0),
         jax_rollouts=JAX_ROLLOUTS,
+        # full-zoo (PR 8): one [S, T, A] batched dispatch per iteration
+        # covers every zoo scenario, so each gradient step trains on
+        # the whole distribution instead of one sampled realization
+        full_zoo=JAX_ROLLOUTS,
         log_path=log_path,
     )
     train_wall = time.perf_counter() - t0
@@ -272,6 +421,8 @@ def run(iterations: int = ITERATIONS) -> bool:
                  for c in zero_shot["grid"].values()]
     zero_shot["median_obj_ratio"] = float(np.median(zs_ratios))
 
+    fleet = _fleet_generalization(state)
+
     n_wins = int(np.sum(wins))
     n_obj_wins = int(sum(g["rl_wins_blended_objective"] for g in gaps.values()))
     claims = {
@@ -281,6 +432,7 @@ def run(iterations: int = ITERATIONS) -> bool:
         "rl_wins_blended_objective": n_obj_wins,
         "per_scenario_gap": gaps,
         "zero_shot": zero_shot,
+        "fleet_scale": fleet,
         "explanation": (
             "A cost win means the trained pool controller undercuts the "
             "cheapest classical scheduler's raw cost on that scenario while "
@@ -380,6 +532,23 @@ def run(iterations: int = ITERATIONS) -> bool:
          "blended-objective ratio vs best classical (gap recorded in "
          "claims.zero_shot)",
          bool(np.isfinite(zs_ratios).all())),
+        ("fleet_zoo_cells",
+         float(len(SCENARIO_ZOO)),
+         "full-zoo batched PPO: every study training iteration collects "
+         "all S zoo scenarios in one [S, T, A] vmapped scan dispatch",
+         all(c.get("full_zoo") for c in fleet["train"].values())
+         and len(SCENARIO_ZOO) >= 4),
+    ] + [
+        (f"fleet_obj_ratio_a{A}", fleet["median_obj_ratio"][str(A)],
+         f"full-zoo-trained A=8/16 controllers zero-shot at A={A} with "
+         "variant catalog + spot head active: median blended-objective "
+         "ratio vs best classical (gap recorded in claims.fleet_scale)",
+         bool(np.isfinite(
+             [c["rl_obj_over_best_classical"]
+              for c in fleet["eval"][str(A)].values()]
+         ).all()))
+        for A in FLEET_EVAL_POOLS
+    ] + [
         ("rollout_ticks_per_s_a64", thr["ticks_per_s"],
          "PoolServingEnv+policy rollout throughput at A=64", True),
         ("jax_rollout_speedup_a64",

@@ -30,6 +30,22 @@ the observability subsystem — and the fully-enabled recorder+event-log
 overhead is recorded informationally.  The disabled-vs-committed claim
 is enforced on full runs only (CI machines vary too much for an
 absolute-throughput gate under BENCH_SMALL).
+
+PR 8 adds the ``fleet_scale`` section: the optimized scan construction
+(accumulated totals, donated carry, lazy sliding-window-min rings)
+against the pre-PR ``"legacy"`` runner flavor — the same build the
+engine shipped with before the optimization, kept alive precisely so
+this A/B runs in one process on one machine and is immune to
+cross-box jitter.  Shapes A=256 and A=1024 at the full 3600-tick
+scan; claim: >= 1.5x at both (measured ~2.9x / ~3.1x on the reference
+box), with the two flavors' ledger totals asserted equivalent.  The
+telemetry-overhead section also grows an A=256 pool so the
+zero-cost-when-off ratchet holds at fleet scale, and ``--fleet-only``
+runs just the fleet A/B for the ``fleet-scale-smoke`` CI step (no
+artifact write).  Multi-device grid sharding rides the existing grid
+rows transparently (``run_grid`` auto-shards when the host exposes
+more than one device); exact sharded-vs-unsharded parity is pinned by
+``tests/test_jax_engine.py`` under a forced multi-device host.
 """
 from __future__ import annotations
 
@@ -73,6 +89,13 @@ GRID_ARCHS = 16
 GRID_SCENARIOS = ("shared_berkeley", "diurnal_phases", "mmpp_bursts",
                   "flash_correlated")
 GRID_NUMPY_SAMPLE = 4 if BENCH_SMALL else 8
+# fleet_scale section: opt-vs-legacy flavor A/B at fleet shapes.  Full
+# scan length always (same rationale as the scan rows above); under
+# BENCH_SMALL only A=256 runs — A=1024 compiles two flavors and is the
+# single most expensive cell of the whole benchmark.
+FLEET_ARCHS = (256,) if BENCH_SMALL else (256, 1024)
+FLEET_REPEATS = 2 if BENCH_SMALL else 3
+FLEET_SPEEDUP_FLOOR = 1.5
 
 
 def _monitor_bench() -> dict:
@@ -198,30 +221,136 @@ def _jax_bench() -> dict:
     return out
 
 
+def _fleet_pair(A: int, repeats: int) -> dict:
+    """One opt-vs-legacy scan A/B at pool size ``A`` (portfolio policy,
+    shared_berkeley, full scan length).  Both flavors run warm in the
+    same process with min-over-repeats, so the ratio is immune to the
+    cross-box absolute-throughput jitter that keeps the NumPy-vs-JAX
+    rows report-only; the two ledgers are asserted equivalent first."""
+    import jax
+    from jax.experimental import enable_x64
+
+    from repro.core.sim import jax_engine as je
+    from repro.core.workloads import SCENARIO_ZOO
+
+    wl = replicate_pool(SERVING_POOL, A, strict_frac=STRICT_FRAC)
+    arr = SCENARIO_ZOO["shared_berkeley"].build(A, duration_s=SCAN_TICKS)
+    pol = je.JAX_POLICIES["portfolio"]
+    cell: dict = {"archs": A}
+    totals = {}
+    for flavor in ("legacy", "opt"):
+        # each flavor gets its own build: the lazy rings change the
+        # carry layout, legacy feeds the EWMA from the host, and the
+        # opt runner donates its state0
+        statics, state0, xs = je.build_sim_inputs(
+            arr, wl, needs_stats=pol.needs_stats,
+            lazy_rings=(flavor == "opt"),
+            ewma_in_scan=None if flavor == "opt" else False,
+        )
+        statics["policy"] = pol.default_params()
+        runner = je._get_runner("portfolio", flavor=flavor)
+        with enable_x64():
+            t = time.perf_counter()
+            out = jax.block_until_ready(runner(statics, state0, xs))
+            first = time.perf_counter() - t
+            wall = float("inf")
+            for _ in range(repeats):
+                t = time.perf_counter()
+                out = jax.block_until_ready(runner(statics, state0, xs))
+                wall = min(wall, time.perf_counter() - t)
+        totals[flavor] = jax.tree.map(np.asarray, out["totals"])
+        cell[flavor] = {
+            "first_s": first,                # compile + run
+            "wall_s": wall,
+            "ticks_per_s": SCAN_TICKS / wall,
+        }
+    # the optimization is a pure reformulation: identical ledgers (the
+    # liveness flags fold to booleans on the opt path, tick counts on
+    # the stacked legacy path — only truthiness is ever consumed)
+    for k, v in totals["legacy"].items():
+        w = totals["opt"][k]
+        if k in je._LIVE_KEYS:
+            assert bool(v) == bool(w), f"flavor liveness drift: {k}"
+        else:
+            np.testing.assert_allclose(
+                np.asarray(w), np.asarray(v), rtol=1e-9, atol=1e-9,
+                err_msg=f"flavor ledger drift: {k}",
+            )
+    cell["speedup_opt"] = cell["legacy"]["wall_s"] / cell["opt"]["wall_s"]
+    return cell
+
+
+def _fleet_scale_bench() -> dict:
+    """Fleet-shape scan A/B (A=256 / A=1024) + device inventory."""
+    import jax
+
+    out = {
+        "ticks": SCAN_TICKS,
+        "repeats": FLEET_REPEATS,
+        "policy": "portfolio",
+        "scenario": "shared_berkeley",
+        "devices": jax.device_count(),
+        "a1024_skipped_small": 1024 not in FLEET_ARCHS,
+        "scan": {},
+    }
+    for A in FLEET_ARCHS:
+        out["scan"][str(A)] = _fleet_pair(A, FLEET_REPEATS)
+    return out
+
+
+def _fleet_rows(fleet: dict) -> List[Row]:
+    rows: List[Row] = []
+    for A in FLEET_ARCHS:
+        sc = fleet["scan"][str(A)]
+        rows.append((
+            f"fleet_opt_ticks_per_s_a{A}", sc["opt"]["ticks_per_s"],
+            f"optimized scan, A={A}, {SCAN_TICKS} ticks", True,
+        ))
+        rows.append((
+            f"fleet_opt_speedup_a{A}", sc["speedup_opt"],
+            f"optimized scan >= {FLEET_SPEEDUP_FLOOR}x the pre-PR "
+            "(legacy-flavor) scan, same run / same machine",
+            sc["speedup_opt"] >= FLEET_SPEEDUP_FLOOR,
+        ))
+    return rows
+
+
+def run_fleet_only() -> bool:
+    """The ``fleet-scale-smoke`` CI entry: just the flavor A/B (with
+    its embedded ledger-parity asserts), no artifact write."""
+    t0 = time.perf_counter()
+    fleet = _fleet_scale_bench()
+    return print_rows("sim_throughput[fleet]", _fleet_rows(fleet), t0)
+
+
 OVERHEAD_TICKS = 2_400 if BENCH_SMALL else 7_200
 OVERHEAD_ARCHS = 64
+OVERHEAD_FLEET_ARCHS = 256
 
 
-def _prev_pool64_tps() -> Optional[float]:
-    """Pool-64 ticks/s from the *committed* artifact, read before this
-    run overwrites it — the pre-telemetry baseline the overhead claim
-    compares against.  Always reads the full-run (non-``_small``) file."""
+def _prev_committed(*keys) -> Optional[float]:
+    """A float from the *committed* artifact, read before this run
+    overwrites it — e.g. the pre-telemetry pool-64 baseline, or the
+    last full run's fleet-pool disabled throughput.  Always reads the
+    full-run (non-``_small``) file; ``None`` when absent."""
     path = os.path.join(os.path.abspath(ARTIFACTS), "BENCH_sim_throughput.json")
     try:
         with open(path) as f:
-            prev = json.load(f)
-        return float(prev["pool_sizes"]["64"]["ticks_per_s"])
+            node = json.load(f)
+        for k in keys:
+            node = node[k]
+        return float(node)
     except Exception:
         return None
 
 
-def _telemetry_overhead_bench() -> dict:
-    """Disabled-vs-enabled telemetry throughput on the same trace/pool."""
+def _telemetry_overhead_pool(A: int) -> dict:
+    """Disabled-vs-enabled telemetry throughput on one trace/pool."""
     from repro.core.sim import Telemetry
 
-    wl = replicate_pool(SERVING_POOL, OVERHEAD_ARCHS, strict_frac=STRICT_FRAC)
+    wl = replicate_pool(SERVING_POOL, A, strict_frac=STRICT_FRAC)
     trace = get_trace("berkeley", OVERHEAD_TICKS, mean_rps=MEAN_RPS)
-    out = {"archs": OVERHEAD_ARCHS, "ticks": OVERHEAD_TICKS}
+    out = {"archs": A, "ticks": OVERHEAD_TICKS}
     # min over repeats on both sides — single-core boxes jitter
     for name, make_tel in (
         ("disabled", lambda: None),
@@ -245,9 +374,28 @@ def _telemetry_overhead_bench() -> dict:
     return out
 
 
+def _telemetry_overhead_bench() -> dict:
+    """The PR 7 pool-64 section plus the PR 8 fleet pool (A=256): the
+    zero-cost-when-off guarantee must not erode as the pool widens.
+    The A=64 pool ratchets against the committed *pre-telemetry*
+    pool-64 day-run throughput; the A=256 pool ratchets against its own
+    previous committed measurement (same-shape, same-trace)."""
+    out = _telemetry_overhead_pool(OVERHEAD_ARCHS)
+    out["a256"] = _telemetry_overhead_pool(OVERHEAD_FLEET_ARCHS)
+    prev_256 = _prev_committed(
+        "telemetry_overhead", "a256", "disabled", "ticks_per_s"
+    )
+    out["a256"]["prev_committed_ticks_per_s"] = prev_256
+    out["a256"]["disabled_vs_committed_ratio"] = (
+        out["a256"]["disabled"]["ticks_per_s"] / prev_256
+        if prev_256 else None
+    )
+    return out
+
+
 def run() -> bool:
     t0 = time.perf_counter()
-    prev_tps = _prev_pool64_tps()
+    prev_tps = _prev_committed("pool_sizes", "64", "ticks_per_s")
     trace = get_trace("berkeley", DAY_TICKS, mean_rps=MEAN_RPS)
     payload = {"pool_sizes": {}, "baseline": {}}
 
@@ -283,6 +431,7 @@ def run() -> bool:
     payload["speedup_64arch"] = speedup
     payload["monitor_a256"] = mon = _monitor_bench()
     payload["jax_engine"] = jx = _jax_bench()
+    payload["fleet_scale"] = fleet = _fleet_scale_bench()
     payload["telemetry_overhead"] = ov = _telemetry_overhead_bench()
     # best observed disabled measurement vs the committed pre-telemetry
     # number; the day run above IS a telemetry-disabled run of the new
@@ -332,6 +481,7 @@ def run() -> bool:
         "NumPy runs, one dispatch",
         jx["grid"]["speedup_grid"] >= 20.0,
     ))
+    rows.extend(_fleet_rows(fleet))
     ratio = ov["disabled_vs_committed_ratio"]
     rows.append((
         "telemetry_disabled_ratio", ratio if ratio is not None else 0.0,
@@ -339,9 +489,21 @@ def run() -> bool:
         "pool-64 throughput (report-only under BENCH_SMALL)",
         True if (BENCH_SMALL or ratio is None) else ratio >= 0.97,
     ))
+    ratio256 = ov["a256"]["disabled_vs_committed_ratio"]
+    rows.append((
+        "telemetry_disabled_ratio_a256", ratio256 if ratio256 is not None else 0.0,
+        "telemetry-disabled A=256 pool within 3% of its committed "
+        "measurement (report-only under BENCH_SMALL)",
+        True if (BENCH_SMALL or ratio256 is None) else ratio256 >= 0.97,
+    ))
     rows.append((
         "telemetry_enabled_overhead_pct", ov["enabled_overhead_pct"],
         "recorder+event-log overhead when fully enabled (informational)",
+        True,
+    ))
+    rows.append((
+        "telemetry_enabled_overhead_pct_a256", ov["a256"]["enabled_overhead_pct"],
+        "fully-enabled overhead at the A=256 fleet pool (informational)",
         True,
     ))
 
@@ -350,4 +512,8 @@ def run() -> bool:
 
 
 if __name__ == "__main__":
+    import sys
+
+    if "--fleet-only" in sys.argv[1:]:
+        raise SystemExit(0 if run_fleet_only() else 1)
     raise SystemExit(0 if run() else 1)

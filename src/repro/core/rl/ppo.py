@@ -158,6 +158,19 @@ def compute_gae(rewards, values, dones, last_value, gamma, lam):
 # Batched rollout collection: one whole episode inside the jitted engine
 # scan instead of T host round-trips through env.step.
 # ---------------------------------------------------------------------------
+def _rewards_from_ys(cfg, ys, expired) -> np.ndarray:
+    """Per-tick ``[..., T, A]`` rewards rebuilt from the engine's per-arch
+    attribution, with the end-of-trace expired sweep booked on the last
+    tick exactly as ``env.step`` does."""
+    viol = np.array(ys["viol"], dtype=np.float64)    # owned: last tick edited
+    viol[..., -1, :] += expired
+    return -cfg.reward_scale * (
+        ys["cost_arch"]
+        + cfg.violation_penalty * viol
+        - cfg.accuracy_bonus * ys["acc_w"]
+    )
+
+
 def collect_rollouts_jax(env: PoolServingEnv, params, key, *,
                          arrivals=None, seed: int = 0) -> dict:
     """Collect one full-episode ``[T, A]`` rollout in a single dispatch.
@@ -210,12 +223,8 @@ def collect_rollouts_jax(env: PoolServingEnv, params, key, *,
             ),
         )
     ys = out["ys"]
-    viol = np.array(ys["viol"], dtype=np.float64)    # owned: last tick edited
-    viol[-1] += out["expired_s"] + out["expired_r"]
-    rewards = -cfg.reward_scale * (
-        ys["cost_arch"]
-        + cfg.violation_penalty * viol
-        - cfg.accuracy_bonus * ys["acc_w"]
+    rewards = _rewards_from_ys(
+        cfg, ys, out["expired_s"] + out["expired_r"]
     )
     dones = np.zeros(T, dtype=np.float32)
     dones[-1] = 1.0
@@ -227,6 +236,100 @@ def collect_rollouts_jax(env: PoolServingEnv, params, key, *,
         "rewards": rewards.astype(np.float32),
         "dones": dones,
         "last_value": np.zeros(A, dtype=np.float32),
+    }
+
+
+def collect_rollouts_jax_zoo(env: PoolServingEnv, params, key) -> dict:
+    """Collect ``[S, T, A]`` rollouts over the env's WHOLE scenario pool
+    in one vmapped dispatch — the full-zoo form of
+    :func:`collect_rollouts_jax`.
+
+    Instead of sampling one scenario per iteration, every scenario in
+    ``env.scenarios`` becomes a cell of the batched engine runner (the
+    same ``vmap`` grid dispatch :func:`~repro.core.sim.jax_engine.run_grid`
+    uses): per-cell arrival realizations, sim seeds and per-tick key
+    streams are all distinct, the net's parameters are shared across
+    cells, and the per-cell monitor streams run as one batched
+    recurrence over the stacked ``[S*A, T]`` arrival matrix (rows are
+    independent, so this is bit-identical to S per-cell passes).
+
+    The returned buffers merge the cell axis into the arch axis —
+    ``[T, S*A, ...]`` — so GAE and the PPO update treat the zoo batch
+    exactly like a wider pool: ``dones`` is the shared one-hot tail
+    (every cell ends at the trace end), per-column advantage streams
+    never mix cells, and the flattened update batch has ``T*S*A`` rows.
+    One PPO iteration therefore trains on every load shape in the zoo
+    at once instead of memorizing this episode's draw.
+    """
+    cfg = env.cfg
+    assert env.scenarios, "full-zoo collection needs a scenario pool"
+    S, A = len(env.scenarios), env.n_archs
+    env._episode += 1              # one zoo sweep advances the episode clock
+    ep = env._episode
+    arrs = np.stack([
+        np.asarray(
+            sc.build(A, seed=sc.seed + ep, duration_s=cfg.duration_s,
+                     mean_rps=cfg.mean_rps),
+            dtype=np.float64,
+        )
+        for sc in env.scenarios
+    ])                             # [S, A, T]
+    T = arrs.shape[2]
+    # distinct per-cell sim seeds across cells AND iterations (tier
+    # noise must not replay), distinct per-cell key streams
+    seeds = [ep * S + i for i in range(S)]
+    keys = jax.random.split(key, S)
+    sim_tmpl = jax_engine.ServingSim(
+        arrs[0], env.workload, pricing=cfg.pricing, seed=seeds[0]
+    )
+    ew, _, p2 = jax_engine.pool_stats_trajectory(arrs.reshape(S * A, T))
+    cells = [
+        jax_engine.build_sim_inputs(
+            arrs[i], env.workload, pricing=cfg.pricing, seed=seeds[i],
+            needs_stats=True, needs_key=True, key=keys[i],
+            stats=(ew[:, i * A:(i + 1) * A], p2[:, i * A:(i + 1) * A]),
+            lazy_rings=False, _sim=sim_tmpl,
+        )
+        for i in range(S)
+    ]
+    statics = cells[0][0]
+    state0_b = jax_engine._tree_stack([c[1] for c in cells])
+    xs_b = jax_engine._tree_stack([c[2] for c in cells])
+    policy_b = jax_engine._tree_stack([{
+        "net": params,
+        "rate_scale": cfg.rate_scale,
+        "fleet_scale": cfg.fleet_scale,
+    }] * S)
+    from jax.experimental import enable_x64
+    with enable_x64():
+        out = jax.tree.map(
+            np.asarray,
+            jax_engine._get_runner("rl_sample", mode="stack", batched=True)(
+                statics, policy_b, state0_b, xs_b
+            ),
+        )
+    ys = out["ys"]                 # leaves [S, T, A, ...]
+    rewards = _rewards_from_ys(
+        cfg, ys, out["expired_s"] + out["expired_r"]
+    )
+
+    def merge(x, dtype):           # [S, T, A, ...] -> [T, S*A, ...]
+        x = np.asarray(x)
+        return np.swapaxes(x, 0, 1).reshape(
+            (T, S * A) + x.shape[3:]
+        ).astype(dtype)
+
+    dones = np.zeros(T, dtype=np.float32)
+    dones[-1] = 1.0
+    return {
+        "obs": merge(ys["obs"], np.float32),
+        "actions": merge(ys["action"], np.int32),
+        "logp": merge(ys["logp"], np.float32),
+        "values": merge(ys["value"], np.float32),
+        "rewards": merge(rewards, np.float32),
+        "dones": dones,
+        "last_value": np.zeros(S * A, dtype=np.float32),
+        "n_cells": S,
     }
 
 
@@ -293,6 +396,7 @@ def train_ppo_pool(
     *,
     verbose: bool = False,
     jax_rollouts: bool = False,
+    full_zoo: bool = False,
     log_path: Optional[str] = None,
 ) -> PPOState:
     """Train the pool controller with batched ``[T, A]`` rollouts.
@@ -303,6 +407,12 @@ def train_ppo_pool(
     superseded by the episode length on that path); the update math is
     identical.
 
+    ``full_zoo=True`` (requires ``jax_rollouts`` and a scenario pool)
+    swaps the per-iteration scenario *sample* for the whole pool:
+    :func:`collect_rollouts_jax_zoo` runs every scenario as a cell of
+    one vmapped engine dispatch and each update trains on the merged
+    ``[T, S*A]`` batch.
+
     ``log_path`` streams the per-iteration training curve (reward,
     loss components, entropy, approx-KL — the fields ``history`` keeps)
     to a JSONL file as it trains, e.g.
@@ -310,6 +420,9 @@ def train_ppo_pool(
     """
     if isinstance(env, ServingEnv):
         env = env.pool
+    assert not full_zoo or (jax_rollouts and env.scenarios), (
+        "full_zoo needs jax_rollouts=True and a scenario pool"
+    )
     A = env.n_archs
     key = jax.random.key(cfg.seed)
     key, knet = jax.random.split(key)
@@ -327,7 +440,8 @@ def train_ppo_pool(
     for it in range(cfg.iterations):
         if jax_rollouts:
             key, kroll = jax.random.split(key)
-            buf = collect_rollouts_jax(env, params, kroll)
+            buf = (collect_rollouts_jax_zoo(env, params, kroll) if full_zoo
+                   else collect_rollouts_jax(env, params, kroll))
             obs_buf, act_buf = buf["obs"], buf["actions"]
             logp_buf, val_buf = buf["logp"], buf["values"]
             rew_buf, done_buf = buf["rewards"], buf["dones"]
@@ -364,15 +478,17 @@ def train_ppo_pool(
         )
         adv = (adv - adv.mean()) / (adv.std() + 1e-8)
 
-        # flatten [T, A] -> [T*A] and update on shuffled minibatches
+        # flatten [T, W] -> [T*W] and update on shuffled minibatches
+        # (W = A, or S*A when a full-zoo batch merged the cell axis)
+        W = obs_buf.shape[1]
         flat = {
-            "obs": obs_buf.reshape(T * A, OBS_DIM),
-            "actions": act_buf.reshape(T * A),
-            "logp_old": logp_buf.reshape(T * A),
-            "adv": adv.reshape(T * A),
-            "returns": rets.reshape(T * A),
+            "obs": obs_buf.reshape(T * W, OBS_DIM),
+            "actions": act_buf.reshape(T * W),
+            "logp_old": logp_buf.reshape(T * W),
+            "adv": adv.reshape(T * W),
+            "returns": rets.reshape(T * W),
         }
-        idx = np.arange(T * A)
+        idx = np.arange(T * W)
         rng = np.random.default_rng(cfg.seed + it)
         mb_stats = []          # device scalars; one host sync per iteration
         for _ in range(cfg.epochs):

@@ -377,6 +377,36 @@ class ServingSim:
             np.floor(RELAXED.slo_s - lat_b1 - egress)
         )
 
+        # hot-path observation buffers: observe_pool refills these in
+        # place every tick instead of allocating fresh [A] vectors, so
+        # the telemetry-disabled tick allocates no obs arrays even at
+        # fleet scale (A=256+).  The PoolObs contract is unchanged in
+        # practice: a returned observation is stable until the *next*
+        # observe_pool call; consumers that keep values across ticks
+        # copy fields out (env._prev_rate does).
+        self._share_pos = self.share > 0
+        self._nstrict_buf = np.zeros(n)
+        self._nrelaxed_buf = np.zeros(n)
+        self._qlen_buf = np.zeros(n)
+        self._qs_buf = np.zeros(n)
+        self._qr_buf = np.zeros(n)
+        self._nact_buf = np.zeros(n, dtype=np.int64)
+        self._npend_buf = np.zeros(n, dtype=np.int64)
+        self._nspot_buf = np.zeros(n, dtype=np.int64)
+        self._thr_buf = np.zeros(n)
+        self._util_buf = np.zeros(n)
+        self._lviol_buf = np.zeros(n)
+        self._harv_level_buf = np.zeros(n)
+        self._harv_ceil_buf = np.zeros(n, dtype=np.int64)
+        self._tier_obs_buf = {
+            k: np.zeros(n, dtype=np.int64)
+            for k in ("n_spot_pending", "n_harvest", "n_harvest_pending",
+                      "n_remote", "n_remote_pending")
+        }
+        self._tobs = dict(self._static_tier_obs)
+        self._tobs["harvest_level"] = self._harv_level_buf
+        self._tobs["harvest_ceiling"] = self._harv_ceil_buf
+
         # per-arch flow accounting (arrived == served_vm + served_burst +
         # dropped + queued, every tick; `per_arch_counts` exposes copies)
         self.arrived_arch = np.zeros(n)
@@ -456,8 +486,14 @@ class ServingSim:
     # Admit + observe.
     # ------------------------------------------------------------------
     def observe_pool(self) -> PoolObs:
-        """Admit this tick's arrivals and return the pool observation."""
+        """Admit this tick's arrivals and return the pool observation.
+
+        The returned ``PoolObs`` aliases per-tick buffers owned by the
+        engine — valid until the next ``observe_pool`` call (every
+        scheduler and the step-wise RL loop consume it within the tick;
+        callers that need history copy fields out)."""
         tick = self.tick
+        rates = self._rates
 
         if self.arrivals is None:
             rate = float(self.trace[tick])
@@ -472,24 +508,26 @@ class ServingSim:
             med = float(self._wmed[tick])
             p2m = window_peak / med if med > 0 else 1.0
 
-            rates = rate * self.share
-            self._ewma_vec = self._ewma * self.share
-            self._peak_vec = window_peak * self.share
-            self._p2m_vec = np.where(self.share > 0, p2m, 1.0)
+            np.multiply(rate, self.share, out=rates)
+            np.multiply(self._ewma, self.share, out=self._ewma_vec)
+            np.multiply(window_peak, self.share, out=self._peak_vec)
+            # zero-share rows stay at their initial 1.0 forever
+            np.copyto(self._p2m_vec, p2m, where=self._share_pos)
         else:
             # heterogeneous streams: one streaming monitor update, every
             # statistic per arch (share scaling cannot express these)
-            rates = self.arrivals[:, tick].copy()
+            np.copyto(rates, self.arrivals[:, tick])
             self.pool_monitor.observe(rates)
             self._ewma_vec, self._peak_vec, _, self._p2m_vec = (
                 self.pool_monitor.stats()
             )
 
-        n_strict = rates * self.strict_frac
+        n_strict = np.multiply(rates, self.strict_frac, out=self._nstrict_buf)
         self.q_strict.push(tick, n_strict)
-        self.q_relaxed.push(tick, rates - n_strict)
+        self.q_relaxed.push(
+            tick, np.subtract(rates, n_strict, out=self._nrelaxed_buf)
+        )
         self.ledger.add_arrivals(float(rates.sum()))
-        self._rates = rates
         self.arrived_arch += rates
         if self.telemetry is not None:
             self.telemetry.on_arrivals(tick, rates)
@@ -530,40 +568,57 @@ class ServingSim:
                 ),
             }
 
-        # tier-portfolio state: idle tiers reuse the precomputed statics;
-        # the harvest signal is provider-side time-varying state, so its
-        # level/ceiling are materialized fresh every tick (the signal
-        # advances whether or not any policy holds harvest capacity)
-        tobs = dict(self._static_tier_obs)
-        n = len(self.keys)
-        tobs["harvest_level"] = np.full(n, self.harvest.level)
-        tobs["harvest_ceiling"] = np.full(
-            n, self.harvest.ceiling(), dtype=np.int64
-        )
-        if self._tier_live["spot"]:
-            tobs["n_spot_pending"] = self.spot.pipeline.total.copy()
-        if self._tier_live["harvest"]:
-            tobs["n_harvest"] = self.harvest.active.copy()
-            tobs["n_harvest_pending"] = self.harvest.pipeline.total.copy()
-        if self._tier_live["remote"]:
-            tobs["n_remote"] = self.remote.active.copy()
-            tobs["n_remote_pending"] = self.remote.pipeline.total.copy()
+        # tier-portfolio state: idle tiers alias the precomputed read-only
+        # statics; live tiers refill their persistent buffers.  The
+        # harvest signal is provider-side time-varying state, so its
+        # level/ceiling are re-broadcast every tick (the signal advances
+        # whether or not any policy holds harvest capacity).
+        tobs = self._tobs
+        self._harv_level_buf.fill(self.harvest.level)
+        self._harv_ceil_buf.fill(self.harvest.ceiling())
+        for obs_key, live, src in (
+            ("n_spot_pending", self._tier_live["spot"],
+             self.spot.pipeline.total),
+            ("n_harvest", self._tier_live["harvest"], self.harvest.active),
+            ("n_harvest_pending", self._tier_live["harvest"],
+             self.harvest.pipeline.total),
+            ("n_remote", self._tier_live["remote"], self.remote.active),
+            ("n_remote_pending", self._tier_live["remote"],
+             self.remote.pipeline.total),
+        ):
+            if live:
+                buf = self._tier_obs_buf[obs_key]
+                np.copyto(buf, src)
+                tobs[obs_key] = buf
+            else:
+                # _tier_live is NOT monotonic (a drained tier goes idle
+                # again) — restore the static zeros when it does
+                tobs[obs_key] = self._static_tier_obs[obs_key]
 
+        np.copyto(self._nact_buf, self.reserved.active)
+        np.copyto(self._npend_buf, self.reserved.pending_total)
+        np.copyto(self._nspot_buf, self.spot.active)
+        np.copyto(self._thr_buf, self.eff_throughput)
+        np.copyto(self._util_buf, self.last_util)
+        np.copyto(self._qs_buf, self.q_strict.totals())
+        np.copyto(self._qr_buf, self.q_relaxed.totals())
+        np.copyto(self._lviol_buf, self.last_viol_arch)
+        np.add(self._qs_buf, self._qr_buf, out=self._qlen_buf)
         self._pool_obs = PoolObs(
             keys=self.keys,
             rate=rates,
             ewma_rate=self._ewma_vec,
             window_peak=self._peak_vec,
             peak_to_median=self._p2m_vec,
-            queue_len=self.q_strict.totals() + self.q_relaxed.totals(),
-            n_active=self.reserved.active.copy(),
-            n_pending=self.reserved.pending_total.copy(),
-            n_spot=self.spot.active.copy(),
-            throughput=self.eff_throughput.copy(),
-            utilization=self.last_util.copy(),
-            queue_strict=self.q_strict.totals().copy(),
-            queue_relaxed=self.q_relaxed.totals().copy(),
-            last_violations=self.last_viol_arch.copy(),
+            queue_len=self._qlen_buf,
+            n_active=self._nact_buf,
+            n_pending=self._npend_buf,
+            n_spot=self._nspot_buf,
+            throughput=self._thr_buf,
+            utilization=self._util_buf,
+            queue_strict=self._qs_buf,
+            queue_relaxed=self._qr_buf,
+            last_violations=self._lviol_buf,
             **tobs,
             **vobs,
         )

@@ -157,6 +157,22 @@ class SimState(NamedTuple):
     last_util: Any        # [A] previous tick's utilization (policy obs)
     last_viol: Any        # [A] previous tick's violation delta
     prev_rate: Any        # [A] previous tick's arrivals (RL trend feature)
+    ewma: Any = None      # [A] in-carry EWMA (None when fed via xs)
+    # lazy-ring sliding-window-min state, per tier (None on the eager
+    # path): [A, L] per-tick event minima, [A, L] previous-block suffix
+    # minima, [A] current-block running min — see _tier_set_target_lazy
+    res_ehist: Any = None
+    res_sufmin: Any = None
+    res_bmin: Any = None
+    spot_ehist: Any = None
+    spot_sufmin: Any = None
+    spot_bmin: Any = None
+    harv_ehist: Any = None
+    harv_sufmin: Any = None
+    harv_bmin: Any = None
+    rem_ehist: Any = None
+    rem_sufmin: Any = None
+    rem_bmin: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -234,18 +250,63 @@ class _Pipe(NamedTuple):
     mat: Any    # [A]    cumulative matured (i32)
 
 
-def _pipe_cancel(p: _Pipe, counts):
+class _LazyPipe(NamedTuple):
+    """A pipeline ring with *lazy* cancel clips.
+
+    The eager :class:`_Pipe` keeps every slot ``<= cum`` by running a
+    full ``min(ring, cum)`` pass on every cancel-capable tick — an
+    O(A*L) read+write that dominates the whole scan at fleet scale
+    (the remote ring alone is 300 columns).  This variant stores the
+    raw slot writes and reconstructs the clip at read time: the value
+    a read needs is ``min(G_s, min of every cum the tier passed
+    through between write and read)`` — a sliding-window minimum over
+    the cum event stream with window L, maintained with the standard
+    two-block decomposition:
+
+    * ``ehist [A, L]``: each tick's event minimum (entry cum ∧ exit
+      cum), written at its slot — O(A) per tick;
+    * ``bmin [A]``: running minimum of the current block's events,
+      reset when the slot wraps to 0;
+    * ``sufmin [A, L]``: suffix minima of the *previous* block's
+      events, recomputed once per L ticks (a ``lax.cond`` whose branch
+      runs O(A*L·logL) — amortized O(A·logL) per tick).
+
+    At a read of slot ``p`` the window ``(t-L, t)`` splits exactly into
+    the previous block's suffix from ``p+1`` plus the current block —
+    ``min(sufmin[p+1], bmin)`` — so the read is O(A) and the per-tick
+    ring cost collapses to two single-slot writes.  Counters are
+    integers, so the lazy and eager forms are bit-identical; the lazy
+    form is only wired into non-batched runners (under ``vmap`` the
+    block-boundary ``cond`` would decay to ``select`` and pay the
+    suffix recompute every tick)."""
+
+    ring: Any     # [A, L] RAW cumulative grants by launch slot (i32)
+    cum: Any      # [A]    cumulative granted, post-cancel (i32)
+    mat: Any      # [A]    cumulative matured (i32)
+    ehist: Any    # [A, L] per-tick event minima by slot (i32)
+    sufmin: Any   # [A, L] previous block's suffix minima (i32)
+    bmin: Any     # [A]    current block's running minimum (i32)
+
+
+_I32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+def _pipe_cancel(p, counts):
     """Cancel up to ``counts[a]`` in-flight launches, newest first.
 
-    Clipping the cumulative curve from the top eats the most recent
-    cohorts first; every stored slot is ``<= cum``, so on cancel-free
-    rows the clip is a numeric no-op — the op runs unconditionally."""
+    Eagerly: clipping the cumulative curve from the top eats the most
+    recent cohorts first; every stored slot is ``<= cum``, so on
+    cancel-free rows the clip is a numeric no-op — the op runs
+    unconditionally.  Lazily: the cum drop alone records the cancel;
+    reads recover the clip from the window minimum."""
     cancel = jnp.minimum(counts, p.cum - p.mat).astype(p.cum.dtype)
     cum = p.cum - cancel
+    if isinstance(p, _LazyPipe):
+        return p._replace(cum=cum)
     return _Pipe(jnp.minimum(p.ring, cum[:, None]), cum, p.mat)
 
 
-def _tier_set_target(active, p: _Pipe, target, slot):
+def _tier_set_target(active, p, target, slot):
     """One tier tick on a pipeline ring: admit the cohort maturing at
     this tick's slot, then grow or shrink toward ``target`` (cancel
     in-flight newest-first before releasing active) —
@@ -254,6 +315,8 @@ def _tier_set_target(active, p: _Pipe, target, slot):
     L ticks ago (or the initial 0) is exactly the cohort maturing now,
     and the write at the end stores this tick's cumulative total for
     tick ``t + L``."""
+    if isinstance(p, _LazyPipe):
+        return _tier_set_target_lazy(active, p, target, slot)
     v = lax.dynamic_slice_in_dim(p.ring, slot, 1, axis=1)[:, 0]
     ready = (v - p.mat).astype(active.dtype)
     active = active + ready
@@ -269,6 +332,48 @@ def _tier_set_target(active, p: _Pipe, target, slot):
         shrink > 0, jnp.minimum(active, jnp.maximum(target, 0)), active
     )
     return active, _Pipe(ring, cum, v)
+
+
+def _tier_set_target_lazy(active, p: _LazyPipe, target, slot):
+    """:func:`_tier_set_target` against a :class:`_LazyPipe` — same
+    integer results, O(A) per tick (see the class docstring)."""
+    L = p.ring.shape[1]
+    # block boundary: the just-completed block becomes "previous" —
+    # recompute its suffix minima, reset the running block min
+    sufmin, bmin = lax.cond(
+        slot == 0,
+        lambda: (
+            lax.associative_scan(jnp.minimum, p.ehist, reverse=True, axis=1),
+            jnp.full_like(p.bmin, _I32_MAX),
+        ),
+        lambda: (p.sufmin, p.bmin),
+    )
+    nxt = jnp.minimum(slot + 1, L - 1)
+    suf = lax.dynamic_slice_in_dim(sufmin, nxt, 1, axis=1)[:, 0]
+    window = jnp.minimum(jnp.where(slot + 1 < L, suf, _I32_MAX), bmin)
+    raw = lax.dynamic_slice_in_dim(p.ring, slot, 1, axis=1)[:, 0]
+    v = jnp.minimum(jnp.minimum(raw, window), p.cum)
+    ready = (v - p.mat).astype(active.dtype)
+    active = active + ready
+    pending = (p.cum - v).astype(active.dtype)
+    in_flight = active + pending
+    grow = jnp.maximum(target - in_flight, 0)
+    shrink = in_flight - target
+    cancel = jnp.where(shrink > 0, jnp.minimum(pending, shrink), 0)
+    entry_cum = p.cum
+    cum = entry_cum + grow.astype(entry_cum.dtype) - cancel.astype(
+        entry_cum.dtype
+    )
+    ring = lax.dynamic_update_slice_in_dim(p.ring, cum[:, None], slot, axis=1)
+    # this tick's event minimum: the lowest cum any later read's window
+    # must see from this tick (entry covers the begin-tick cancel)
+    e = jnp.minimum(entry_cum, cum)
+    ehist = lax.dynamic_update_slice_in_dim(p.ehist, e[:, None], slot, axis=1)
+    bmin = jnp.minimum(bmin, e)
+    active = jnp.where(
+        shrink > 0, jnp.minimum(active, jnp.maximum(target, 0)), active
+    )
+    return active, _LazyPipe(ring, cum, v, ehist, sufmin, bmin)
 
 
 def _spot_begin(active, p: _Pipe, u, p_reclaim):
@@ -468,15 +573,47 @@ JAX_POLICIES: Dict[str, JaxPolicy] = {
 # ---------------------------------------------------------------------------
 # The tick function.
 # ---------------------------------------------------------------------------
-def _tick(state: SimState, xs: dict, st: dict, policy_apply):
+#: the monitor's smoothing constant, hoisted once (a Python float is a
+#: trace-time constant — no statics traffic)
+_EWMA_ALPHA = float(LoadMonitor.ewma_alpha)
+
+
+def _pipe_of(state: SimState, pre: str, lazy: bool):
+    """A tier's pipeline view over the flat state, eager or lazy."""
+    ring = getattr(state, pre + "_ring")
+    cum = getattr(state, pre + "_cum")
+    mat = getattr(state, pre + "_mat")
+    if lazy:
+        return _LazyPipe(
+            ring, cum, mat,
+            getattr(state, pre + "_ehist"),
+            getattr(state, pre + "_sufmin"),
+            getattr(state, pre + "_bmin"),
+        )
+    return _Pipe(ring, cum, mat)
+
+
+def _tick(state: SimState, xs: dict, st: dict, policy_apply,
+          ewma_in_carry: bool = False, lazy_rings: bool = False):
     """One engine tick, pure: ``(state, inputs) -> (state, metrics)``.
 
     Mirrors ``ServingSim.observe_pool`` + ``_step`` operation for
     operation; see the module docstring for why the branchless form is
-    exact."""
+    exact.  With ``ewma_in_carry`` the monitor's EWMA recurrence runs
+    inside the scan (same float64 expression, same operation order as
+    :func:`_ewma_trajectory` — bit-identical) instead of arriving as a
+    host-precomputed ``[T, A]`` input."""
     t = xs["t"]
     rate = xs["rate"]
     A = rate.shape[0]
+    if ewma_in_carry:
+        # first observe seeds the EWMA with the raw rates (seen == 0)
+        ewma = jnp.where(
+            t == 0, rate,
+            _EWMA_ALPHA * rate + (1.0 - _EWMA_ALPHA) * state.ewma,
+        )
+    else:
+        ewma = xs["ewma"]
 
     # ---- admit (observe_pool): age the queues, push this tick (new
     # arrivals land in the newest bucket: only the total prefix) -------
@@ -494,7 +631,7 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply):
     # NumPy engine serves because a dead tier's state IS zero) ---------
     obs = {
         "rate": rate,
-        "ewma_rate": xs["ewma"],
+        "ewma_rate": ewma,
         "peak_to_median": xs["p2m"],
         "queue_len": qs_tot + qr_tot,
         "queue_strict": qs_tot,
@@ -525,12 +662,12 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply):
     # tier's ring slot for this tick is t mod L (L static per tier) ----
     res_active, res_pipe = _tier_set_target(
         state.res_active,
-        _Pipe(state.res_ring, state.res_cum, state.res_mat),
+        _pipe_of(state, "res", lazy_rings),
         acts["target"], t % state.res_ring.shape[1],
     )
     spot_active, spot_pipe, reclaimed = _spot_begin(
         state.spot_active,
-        _Pipe(state.spot_ring, state.spot_cum, state.spot_mat),
+        _pipe_of(state, "spot", lazy_rings),
         xs["spot_u"], st["p_reclaim"],
     )
     spot_active, spot_pipe = _tier_set_target(
@@ -539,7 +676,7 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply):
     )
     harv_active, harv_pipe, evicted = _harvest_begin(
         state.harv_active,
-        _Pipe(state.harv_ring, state.harv_cum, state.harv_mat),
+        _pipe_of(state, "harv", lazy_rings),
         xs["h_ceil"],
     )
     harv_active, harv_pipe = _tier_set_target(
@@ -548,7 +685,7 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply):
     )
     rem_active, rem_pipe = _tier_set_target(
         state.rem_active,
-        _Pipe(state.rem_ring, state.rem_cum, state.rem_mat),
+        _pipe_of(state, "rem", lazy_rings),
         acts["remote"], t % state.rem_ring.shape[1],
     )
     preempt = reclaimed + evicted
@@ -625,6 +762,13 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply):
         rem_active.sum() + (rem_pipe.cum - rem_pipe.mat).sum()
     ) > 0
 
+    lazy_kw = {}
+    if lazy_rings:
+        for pre, pipe in (("res", res_pipe), ("spot", spot_pipe),
+                          ("harv", harv_pipe), ("rem", rem_pipe)):
+            lazy_kw[pre + "_ehist"] = pipe.ehist
+            lazy_kw[pre + "_sufmin"] = pipe.sufmin
+            lazy_kw[pre + "_bmin"] = pipe.bmin
     new_state = SimState(
         qs_buf=qs_buf, qr_buf=qr_buf,
         res_active=res_active,
@@ -639,6 +783,8 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply):
         rem_ring=rem_pipe.ring, rem_cum=rem_pipe.cum, rem_mat=rem_pipe.mat,
         burst_last_used=last_used, last_util=util, last_viol=viol_arch,
         prev_rate=rate,
+        ewma=ewma if ewma_in_carry else None,
+        **lazy_kw,
     )
     ys = {
         "served": served,
@@ -716,6 +862,9 @@ def build_sim_inputs(
     needs_key: bool = False,
     key=None,
     ewma: Optional[np.ndarray] = None,
+    ewma_in_scan: Optional[bool] = None,
+    stats: Optional[tuple] = None,
+    lazy_rings: bool = True,
     _sim: Optional[ServingSim] = None,
 ):
     """Materialize ``(statics, state0, xs)`` for one scan — NumPy host
@@ -729,7 +878,16 @@ def build_sim_inputs(
     :func:`run_grid` amortize that construction over cells sharing a
     workload (every sim-derived quantity is arrival- and
     seed-independent except the warm-start fleet, recomputed here), and
-    ``ewma`` likewise injects a precomputed smoothing trajectory.
+    ``stats`` likewise injects precomputed ``(ewma, p2m)`` monitor
+    trajectories for ``needs_stats`` policies (the grid batches the
+    monitor across cells).
+
+    On the non-stats path the EWMA recurrence runs *inside* the scan by
+    default (``ewma_in_scan=None`` resolves to ``not needs_stats``):
+    ``state0.ewma`` seeds the carry and no ``[T, A]`` smoothing input
+    is materialized.  Pass ``ewma_in_scan=False`` for the legacy
+    host-precomputed input (``ewma`` optionally injects it); the runner
+    flavor must match (:func:`_get_runner` ``flavor``).
     """
     arrivals = np.asarray(arrivals, dtype=np.float64)
     assert arrivals.ndim == 2, "the JAX engine needs an [A, T] matrix"
@@ -742,10 +900,16 @@ def build_sim_inputs(
         "the JAX engine covers the single-variant pipeline (no catalog)"
     )
 
+    if ewma_in_scan is None:
+        ewma_in_scan = not needs_stats
     if needs_stats:
-        ewma, _, p2m = pool_stats_trajectory(arrivals)
+        assert not ewma_in_scan, "stats policies read the monitor stream"
+        if stats is not None:
+            ewma, p2m = stats
+        else:
+            ewma, _, p2m = pool_stats_trajectory(arrivals)
     else:
-        if ewma is None:
+        if not ewma_in_scan and ewma is None:
             ewma = _ewma_trajectory(arrivals, LoadMonitor.ewma_alpha)
         # no policy on this path reads peak_to_median: a broadcastable
         # placeholder keeps it out of the grid's host->device traffic
@@ -817,17 +981,36 @@ def build_sim_inputs(
         last_util=np.zeros(A, dtype=np.float64),
         last_viol=np.zeros(A, dtype=np.float64),
         prev_rate=arrivals[:, 0].copy(),         # trend feature = 0 at t=0
+        # the t=0 value is recomputed in-scan; this seeds dtype/shape
+        ewma=arrivals[:, 0].copy() if ewma_in_scan else None,
+        # lazy-ring window-min state: "no events yet" is +inf everywhere
+        **(
+            {
+                pre + suf: (
+                    np.full(A, _I32_MAX, dtype=np.int32) if suf == "_bmin"
+                    else np.full(
+                        (A, getattr(sim, tier).pipeline.lat), _I32_MAX,
+                        dtype=np.int32,
+                    )
+                )
+                for pre, tier in (("res", "reserved"), ("spot", "spot"),
+                                  ("harv", "harvest"), ("rem", "remote"))
+                for suf in ("_ehist", "_sufmin", "_bmin")
+            }
+            if lazy_rings else {}
+        ),
     )
     xs = {
         "t": np.arange(T, dtype=np.int64),
         "rate": np.ascontiguousarray(arrivals.T),
-        "ewma": ewma,
         "p2m": p2m,
         "spot_u": spot_reclaim_uniforms(seed, T, A),
         "h_ceil": (lev * cap).astype(np.int64),
         "h_lev_obs": h_lev_obs,
         "h_ceil_obs": (h_lev_obs * cap).astype(np.int64),
     }
+    if not ewma_in_scan:
+        xs["ewma"] = ewma
     if needs_key:
         if key is None:
             key = jax.random.PRNGKey(seed)
@@ -853,14 +1036,23 @@ def _n_late(mask: np.ndarray) -> np.ndarray:
     return n
 
 
-def _split_keys(key, n: int) -> np.ndarray:
-    """``n`` per-tick keys via the host rollout loop's split sequence
-    (``key, k_t = split(key)`` each tick)."""
-    keys = np.empty((n, 2), dtype=np.uint32)
-    for t in range(n):
-        key, kt = jax.random.split(key)
-        keys[t] = np.asarray(jax.random.key_data(kt))
+@jax.jit
+def _split_chain(key, length):
+    """The host rollout loop's split sequence (``key, k_t = split(key)``
+    each tick) as ONE device scan — bit-identical keys, one dispatch
+    instead of ``n`` host round-trips."""
+    def f(k, _):
+        k, kt = jax.random.split(k)
+        return k, jax.random.key_data(kt)
+
+    _, keys = lax.scan(f, key, length)
     return keys
+
+
+def _split_keys(key, n: int) -> np.ndarray:
+    return np.asarray(
+        _split_chain(key, np.zeros(n, dtype=np.int8)), dtype=np.uint32
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -877,20 +1069,78 @@ GAUGE_KEYS = frozenset(
     ("n_res", "n_spot", "n_harv", "n_rem", "queue_strict", "queue_relaxed")
 )
 
+#: metric keys reduced by the in-carry accumulator ("sum" mode); the
+#: per-tick liveness flags fold with logical-or instead of ``+``
+_SUM_KEYS = (
+    "served", "burst", "dropped", "viol", "viol_strict", "acc_w",
+    "acc_viol", "cost_arch", "cost_res", "cost_spot", "cost_harv",
+    "cost_rem", "cost_burst", "preempt", "chip", "need", "over",
+)
+_LIVE_KEYS = ("harv_live", "rem_live")
 
-def make_runner(policy_apply, mode: str = "sum"):
+#: default chunked-scan unroll for the optimized runner flavor.  The
+#: option exists (``make_runner(unroll=...)`` chunks the scan body so
+#: XLA amortizes loop overhead), but on CPU unrolling forces the
+#: single-slot ring writes to materialize full copies per unrolled
+#: step — measured strictly slower at A>=256 — so the default stays 1
+SCAN_UNROLL = 1
+
+
+def make_runner(policy_apply, mode: str = "sum", *, unroll: int = 1,
+                ewma_in_carry: bool = False, accumulate: bool = False,
+                lazy_rings: bool = False):
     """Build ``run(statics, state0, xs) -> out`` around one policy.
 
-    ``mode="sum"`` reduces the per-tick metrics in-graph (scenario
-    evaluation); ``mode="stack"`` returns them per tick (rollout
-    collection).  Not jitted or cached — see :func:`_get_runner`.
+    ``mode="sum"`` reduces the per-tick metrics (scenario evaluation);
+    ``mode="stack"`` returns them per tick (rollout collection).
+    ``accumulate`` (sum mode only) folds the totals into the scan carry
+    as running sums instead of stacking ``[T, ...]`` outputs and
+    reducing post-scan — at fleet scale the stacked form writes and
+    re-reads hundreds of MB per run, the in-carry form touches only
+    ``[A]`` accumulators.  ``unroll`` is passed through to ``lax.scan``
+    (the chunked/unrolled option); ``ewma_in_carry`` moves the monitor
+    EWMA into the scan (see :func:`_tick`).  Not jitted or cached — see
+    :func:`_get_runner`.
     """
+    assert not (accumulate and mode != "sum")
 
     def run(statics, state0, xs):
-        def f(carry, x):
-            return _tick(carry, x, statics, policy_apply)
+        if accumulate:
+            x0 = jax.tree.map(lambda a: a[0], xs)
+            ys_shape = jax.eval_shape(
+                lambda s, x: _tick(s, x, statics, policy_apply,
+                                   ewma_in_carry, lazy_rings)[1],
+                state0, x0,
+            )
+            acc0 = {
+                k: jnp.zeros(ys_shape[k].shape, ys_shape[k].dtype)
+                for k in _SUM_KEYS + _LIVE_KEYS
+            }
 
-        final, ys = lax.scan(f, state0, xs)
+            def f(carry, x):
+                state, acc = carry
+                state, ys = _tick(state, x, statics, policy_apply,
+                                  ewma_in_carry, lazy_rings)
+                acc = {
+                    k: (acc[k] | ys[k]) if k in _LIVE_KEYS
+                    else acc[k] + ys[k]
+                    for k in acc
+                }
+                return (state, acc), None
+
+            (final, tot), _ = lax.scan(f, (state0, acc0), xs, unroll=unroll)
+            return {
+                "final": final,
+                "expired_s": _late_mass(final.qs_buf, statics["fin_s"]),
+                "expired_r": _late_mass(final.qr_buf, statics["fin_r"]),
+                "totals": tot,
+            }
+
+        def f(carry, x):
+            return _tick(carry, x, statics, policy_apply, ewma_in_carry,
+                         lazy_rings)
+
+        final, ys = lax.scan(f, state0, xs, unroll=unroll)
         out = {
             "final": final,
             "expired_s": _late_mass(final.qs_buf, statics["fin_s"]),
@@ -912,10 +1162,76 @@ def make_runner(policy_apply, mode: str = "sum"):
     return run
 
 
-def _get_runner(policy: str, mode: str = "sum", batched: bool = False):
-    key = (policy, mode, batched)
+def _flavor_opts(policy: str, mode: str, flavor: str) -> dict:
+    """Resolve a runner flavor to concrete :func:`make_runner` options.
+
+    ``"opt"`` (default everywhere) carries the totals and — for
+    policies that never read the order statistics — the EWMA in the
+    scan carry, and unrolls the scan; ``"legacy"`` reproduces the
+    pre-optimization construction (stacked per-tick outputs, host-fed
+    EWMA, unroll=1, no donation) and exists so the throughput benchmark
+    can A/B the two in one run on one machine."""
+    if flavor == "legacy":
+        return dict(unroll=1, ewma_in_carry=False, accumulate=False,
+                    lazy_rings=False)
+    assert flavor == "opt", flavor
+    return dict(
+        unroll=SCAN_UNROLL,
+        ewma_in_carry=not JAX_POLICIES[policy].needs_stats,
+        accumulate=(mode == "sum"),
+        # under vmap the lazy rings' block-boundary cond decays to
+        # select (both branches execute) — batched runners keep the
+        # eager clip; _get_runner strips this flag for them
+        lazy_rings=True,
+    )
+
+
+def _get_sharded_runner(policy: str, mesh, mode: str = "sum",
+                        flavor: str = "opt"):
+    """The batched grid runner wrapped in ``shard_map``: the leading
+    cell axis splits across ``mesh``'s devices (pure data parallelism —
+    cells never communicate), statics stay replicated.  The logical
+    "cells" axis maps onto the mesh axis through the standard
+    :mod:`repro.distributed.sharding` rules so the spec derivation is
+    the same one model code uses."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.distributed.sharding import AxisRules, logical_to_spec
+
+    ndev = mesh.devices.size
+    key = (policy, mode, "sharded", ndev, flavor)
     if key not in _RUNNERS:
-        base = make_runner(JAX_POLICIES[policy].apply, mode)
+        opts = _flavor_opts(policy, mode, flavor)
+        opts["lazy_rings"] = False          # vmapped inside shard_map
+        base = make_runner(JAX_POLICIES[policy].apply, mode, **opts)
+
+        def grid(statics, policy_params, state0, xs):
+            return base({**statics, "policy": policy_params}, state0, xs)
+
+        inner = jax.vmap(grid, in_axes=(None, 0, 0, 0))
+        rules = AxisRules(mesh, {"cells": mesh.axis_names[0]})
+        cell = logical_to_spec(("cells",), rules)
+        rep = logical_to_spec((), rules)
+        # check_rep=False: the binomial inverse-CDF lax.while_loop has no
+        # shard_map replication rule; every input/output spec is explicit
+        # here so the check adds nothing.
+        fn = shard_map(
+            inner, mesh=mesh,
+            in_specs=(rep, cell, cell, cell), out_specs=cell,
+            check_rep=False,
+        )
+        _RUNNERS[key] = jax.jit(fn)
+    return _RUNNERS[key]
+
+
+def _get_runner(policy: str, mode: str = "sum", batched: bool = False,
+                flavor: str = "opt"):
+    key = (policy, mode, batched, flavor)
+    if key not in _RUNNERS:
+        opts = _flavor_opts(policy, mode, flavor)
+        if batched:
+            opts["lazy_rings"] = False
+        base = make_runner(JAX_POLICIES[policy].apply, mode, **opts)
         if batched:
             # one statics pytree serves every cell (grid cells share a
             # workload); only policy params, state and per-tick inputs
@@ -924,17 +1240,25 @@ def _get_runner(policy: str, mode: str = "sum", batched: bool = False):
                 return base({**statics, "policy": policy_params}, state0, xs)
 
             fn = jax.vmap(grid, in_axes=(None, 0, 0, 0))
+            donate = (2,)
         else:
             fn = base
-        _RUNNERS[key] = jax.jit(fn)
+            donate = (1,)
+        if flavor == "opt":
+            # donate the scan carry's initial state — jit converts the
+            # host state0 to a fresh device buffer per call, so XLA may
+            # alias it into the carry without copying
+            _RUNNERS[key] = jax.jit(fn, donate_argnums=donate)
+        else:
+            _RUNNERS[key] = jax.jit(fn)
     return _RUNNERS[key]
 
 
 def runner_trace_count(policy: str, mode: str = "sum",
-                       batched: bool = False) -> int:
+                       batched: bool = False, flavor: str = "opt") -> int:
     """How many distinct shapes the cached runner has traced (the
     recompile guard: repeated same-shape runs must report 1)."""
-    fn = _RUNNERS.get((policy, mode, batched))
+    fn = _RUNNERS.get((policy, mode, batched, flavor))
     return 0 if fn is None else fn._cache_size()
 
 
@@ -947,12 +1271,12 @@ _TRACE_WARNED: set = set()
 
 
 def note_runner_use(policy: str, mode: str = "sum",
-                    batched: bool = False) -> int:
+                    batched: bool = False, flavor: str = "opt") -> int:
     """Record a runner dispatch: export its trace count as a telemetry
     counter and warn (once per key) if it retraced for an already-seen
     ``(policy, mode, batched)`` key.  Returns the current trace count."""
-    key = (policy, mode, batched)
-    n = runner_trace_count(policy, mode, batched)
+    key = (policy, mode, batched, flavor)
+    n = runner_trace_count(policy, mode, batched, flavor)
     telemetry.set_global_counter(
         f'jax_runner_traces_total{{policy="{policy}",mode="{mode}",'
         f'batched="{int(batched)}"}}', n)
@@ -1106,37 +1430,49 @@ def run_grid(
     pricing: FleetPricing = PRICING,
     prewarm: bool = True,
     warm_start: bool = True,
+    sharded: Optional[bool] = None,
 ) -> List[dict]:
     """A whole (scenario x seed x policy-params) grid in ONE vmapped
     dispatch: cell ``i`` runs ``arrivals_batch[i]`` under
     ``params_batch[i]`` with spot/harvest realizations from
     ``seeds[i]``.  Returns one :func:`run_scenario`-shaped dict per
-    cell."""
+    cell.
+
+    With more than one device the cell axis is sharded across them via
+    ``shard_map`` (``sharded=None`` auto-enables when the cell count
+    divides evenly; ``True`` requires it, ``False`` forces the single
+    dispatch).  Cells never communicate, so the sharded and unsharded
+    paths compute identical cells."""
+    from repro.distributed.sharding import device_mesh
+
     arrivals_batch = np.asarray(arrivals_batch, dtype=np.float64)
     B, A, T = arrivals_batch.shape
     pol = JAX_POLICIES[policy]
     seeds = list(seeds) if seeds is not None else [0] * B
     assert len(seeds) == B
     # one template sim serves the whole grid (cells share the
-    # workload); the per-cell EWMA runs as a single batched recurrence
+    # workload); per-cell monitor streams run as ONE batched recurrence
+    # over the stacked [B*A, T] arrival matrix (rows are independent,
+    # so the batched pass is bit-identical to B per-cell passes)
     sim = ServingSim(
         arrivals_batch[0], workload, pricing=pricing, prewarm=prewarm,
         warm_start=warm_start, seed=seeds[0],
     )
     if pol.needs_stats:
-        ewmas = [None] * B
+        ew, _, p2 = pool_stats_trajectory(arrivals_batch.reshape(B * A, T))
+        stats = [
+            (ew[:, i * A:(i + 1) * A], p2[:, i * A:(i + 1) * A])
+            for i in range(B)
+        ]
     else:
-        ew = _ewma_trajectory(
-            arrivals_batch.reshape(B * A, T), LoadMonitor.ewma_alpha
-        )
-        ewmas = [ew[:, i * A:(i + 1) * A] for i in range(B)]
+        stats = [None] * B       # EWMA runs in the scan carry
     cells = [
         build_sim_inputs(
             arrivals_batch[i], workload, pricing=pricing, seed=seeds[i],
             prewarm=prewarm, warm_start=warm_start,
             needs_stats=pol.needs_stats, needs_key=pol.needs_key,
             key=jax.random.PRNGKey(seeds[i]) if pol.needs_key else None,
-            ewma=ewmas[i], _sim=sim,
+            stats=stats[i], lazy_rings=False, _sim=sim,
         )
         for i in range(B)
     ]
@@ -1146,10 +1482,21 @@ def run_grid(
     if params_batch is None:
         params_batch = [pol.default_params() for _ in range(B)]
     policy_b = _tree_stack(list(params_batch))
-    with enable_x64():
-        out = _tree_to_host(
-            _get_runner(policy, batched=True)(statics, policy_b, state0_b, xs_b)
+    mesh = device_mesh()
+    use_shard = (
+        mesh is not None and B % mesh.devices.size == 0
+        if sharded is None else sharded
+    )
+    if use_shard:
+        assert mesh is not None and B % mesh.devices.size == 0, (
+            f"sharded run_grid needs the cell count ({B}) to divide the "
+            f"device count ({1 if mesh is None else mesh.devices.size})"
         )
+        runner = _get_sharded_runner(policy, mesh)
+    else:
+        runner = _get_runner(policy, batched=True)
+    with enable_x64():
+        out = _tree_to_host(runner(statics, policy_b, state0_b, xs_b))
     note_runner_use(policy, batched=True)
     return [
         _assemble(_tree_index(out, i), arrivals_batch[i]) for i in range(B)

@@ -162,7 +162,14 @@ class TimeSeriesRecorder:
 
     *Flows* (``arrived``, ``served_vm``, ...) accumulate within a stride
     bucket; *gauges* (fleet, queues, variants) are last-write-wins, i.e.
-    the bucket reports its final tick's state."""
+    the bucket reports its final tick's state.
+
+    Buffers are sized ``R x A`` from the stride at allocation, and the
+    gauge series are narrow (float32 / int32): they are observability
+    state, not ledger inputs, and at fleet scale (A=256+) the ``[R, A]``
+    gauge buffers dominate the recorder's footprint.  Flows and
+    ``tier_cost`` stay float64 — the event-log reconciliation asserts
+    exact agreement between their sums and the billing ledger."""
 
     FLOW_NAMES = (
         "arrived", "served_vm", "served_burst", "dropped",
@@ -179,16 +186,16 @@ class TimeSeriesRecorder:
         self.tier_names = tuple(tier_names)
         R, A = self.rows, self.n_archs
         self.tick = np.full(R, -1, dtype=np.int64)
-        self.tier_active = {t: np.zeros((R, A), np.int64) for t in self.tier_names}
-        self.tier_pending = {t: np.zeros((R, A), np.int64) for t in self.tier_names}
-        self.queue_depth = {c: np.zeros((R, A)) for c in _CLS}
-        self.queue_age_p99 = {c: np.zeros((R, A), np.int64) for c in _CLS}
+        self.tier_active = {t: np.zeros((R, A), np.int32) for t in self.tier_names}
+        self.tier_pending = {t: np.zeros((R, A), np.int32) for t in self.tier_names}
+        self.queue_depth = {c: np.zeros((R, A), np.float32) for c in _CLS}
+        self.queue_age_p99 = {c: np.zeros((R, A), np.int32) for c in _CLS}
         self.flows = {name: np.zeros((R, A)) for name in self.FLOW_NAMES}
         self.tier_cost = np.zeros((R, len(TIER_ORDER)))
-        self.active_variant = np.zeros((R, A), np.int64)
+        self.active_variant = np.zeros((R, A), np.int32)
         self.swap_in_flight = np.zeros((R, A), bool)
         self.utilization = np.zeros((R, A), np.float32)
-        self.harvest_level = np.zeros(R)
+        self.harvest_level = np.zeros(R, np.float32)
         self._touched = 0                    # rows actually written
 
     def row(self, tick: int) -> int:

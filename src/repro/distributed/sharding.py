@@ -14,11 +14,22 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
 _STATE = threading.local()
+
+
+def device_mesh(axis: str = "grid", devices=None) -> Optional[Mesh]:
+    """A 1-D mesh over all local devices, or ``None`` on a single
+    device (callers fall back to their unsharded path).  ``axis`` names
+    the mesh axis data-parallel batch dimensions shard over."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) <= 1:
+        return None
+    return Mesh(np.array(devices), (axis,))
 
 
 @dataclass

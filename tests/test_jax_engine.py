@@ -172,6 +172,18 @@ def test_fuzz_policies_and_shapes():
         _assert_equivalent(arr, _workload(A), policy, seed=seed)
 
 
+def test_fuzz_fleet_scale_a256():
+    """Fleet-scale differential fuzz: the lazy window-min rings, the
+    in-carry EWMA and the in-carry totals accumulator must hold the
+    ledger contract at A=256, not just at toy pool sizes."""
+    A, T = 256, 150
+    wl = _workload(A)
+    arr = SCENARIO_ZOO["shared_berkeley"].build(
+        A, duration_s=T, mean_rps=400.0, seed=9
+    )
+    _assert_equivalent(arr, wl, "portfolio", seed=9)
+
+
 def test_fuzz_rl_pool_parity():
     """The in-scan rl_pool twin matches RLPoolPolicy(greedy=True)
     driving the NumPy engine — net forward, feature build, procurement
@@ -208,13 +220,21 @@ def test_flow_conservation_per_arch():
 def test_simstate_pytree_roundtrip():
     A, T = 3, 50
     arr = SCENARIO_ZOO["shared_berkeley"].build(A, duration_s=T)
+    # stats path: the EWMA arrives via xs, so the carry slot is an
+    # empty (None) subtree and contributes no leaf
     _, state0, _ = je.build_sim_inputs(arr, _workload(A))
+    assert state0.ewma is None
     leaves, treedef = jax.tree.flatten(state0)
-    assert len(leaves) == len(je.SimState._fields)
+    assert len(leaves) == len(je.SimState._fields) - 1
     rebuilt = jax.tree.unflatten(treedef, leaves)
     assert isinstance(rebuilt, je.SimState)
     for a, b in zip(jax.tree.leaves(rebuilt), leaves):
         np.testing.assert_array_equal(a, b)
+    # non-stats path: the EWMA recurrence lives in the carry
+    _, state0, xs = je.build_sim_inputs(arr, _workload(A), needs_stats=False)
+    assert state0.ewma is not None and "ewma" not in xs
+    leaves, _ = jax.tree.flatten(state0)
+    assert len(leaves) == len(je.SimState._fields)
 
 
 def test_smoke_recompile_guard():
@@ -230,6 +250,63 @@ def test_smoke_recompile_guard():
     arr2 = SCENARIO_ZOO["shared_berkeley"].build(5, duration_s=120)
     je.run_scenario(arr2, _workload(5), "reactive")
     assert je.runner_trace_count("reactive") == n0 + 1
+
+
+def test_donation_safety_and_flavor_parity():
+    """The donated opt runner (a) is repeatable — two dispatches from
+    the same host-side inputs return identical totals, proving donation
+    aliases only the fresh device staging buffers, never the caller's
+    NumPy arrays — and (b) does not drift from the legacy flavor
+    (eager ring clips, host-fed EWMA, stacked post-scan reduction)."""
+    from jax.experimental import enable_x64
+
+    A, T = 8, 300
+    wl = _workload(A)
+    arr = SCENARIO_ZOO["mmpp_bursts"].build(A, duration_s=T, seed=5)
+    pol = je.JAX_POLICIES["portfolio"]
+    with enable_x64():
+        statics, state0, xs = je.build_sim_inputs(
+            arr, wl, seed=3, needs_stats=pol.needs_stats,
+            needs_key=pol.needs_key,
+        )
+        statics = dict(statics)
+        statics["policy"] = pol.default_params()
+        state_snap = [np.array(x, copy=True) for x in jax.tree.leaves(state0)]
+        xs_snap = [np.array(x, copy=True) for x in jax.tree.leaves(xs)]
+        runner = je._get_runner("portfolio")
+        out1 = jax.tree.map(np.asarray, runner(statics, state0, xs))
+        out2 = jax.tree.map(np.asarray, runner(statics, state0, xs))
+        for k in out1["totals"]:
+            np.testing.assert_array_equal(
+                out1["totals"][k], out2["totals"][k], err_msg=k
+            )
+        for got, want in zip(jax.tree.leaves(state0), state_snap):
+            np.testing.assert_array_equal(np.asarray(got), want)
+        for got, want in zip(jax.tree.leaves(xs), xs_snap):
+            np.testing.assert_array_equal(np.asarray(got), want)
+
+        statics_l, state0_l, xs_l = je.build_sim_inputs(
+            arr, wl, seed=3, needs_stats=pol.needs_stats,
+            needs_key=pol.needs_key, ewma_in_scan=False, lazy_rings=False,
+        )
+        statics_l = dict(statics_l)
+        statics_l["policy"] = pol.default_params()
+        out_l = jax.tree.map(
+            np.asarray,
+            je._get_runner("portfolio", flavor="legacy")(
+                statics_l, state0_l, xs_l
+            ),
+        )
+    for k in out1["totals"]:
+        if k in je._LIVE_KEYS:
+            # opt folds liveness with logical-or, legacy sums the per-
+            # tick flags — only truthiness is consumed (_assemble)
+            assert bool(out1["totals"][k]) == bool(out_l["totals"][k]), k
+            continue
+        np.testing.assert_allclose(
+            out1["totals"][k], out_l["totals"][k], rtol=1e-9, atol=1e-9,
+            err_msg=f"flavor drift in {k}",
+        )
 
 
 def test_smoke_grid_matches_run_scenario():
@@ -322,3 +399,94 @@ def test_collect_rollouts_jax_buffers():
     # a different key draws a different action stream
     buf3 = collect_rollouts_jax(env, params, jax.random.key(12))
     assert (buf3["actions"] != buf["actions"]).any()
+
+
+def test_collect_rollouts_jax_zoo_matches_cells():
+    """The full-zoo batched collector is bit-identical, cell by cell,
+    to the unbatched collector run on the same (arrivals, seed, key)
+    triples — the vmapped dispatch changes wall-clock, not rollouts."""
+    from repro.core.rl.env import EnvConfig, PoolServingEnv
+    from repro.core.rl.ppo import (
+        OBS_DIM,
+        PPOConfig,
+        collect_rollouts_jax,
+        collect_rollouts_jax_zoo,
+        init_net,
+    )
+
+    A, T = 2, 200
+    zoo = [SCENARIO_ZOO[n]
+           for n in ("shared_berkeley", "mmpp_bursts", "flash_correlated")]
+    S = len(zoo)
+    cfg = EnvConfig(duration_s=T, mean_rps=40.0)
+    wl = _workload(A)
+    env = PoolServingEnv(wl, cfg, scenarios=zoo, scenario_seed=0)
+    params = init_net(jax.random.key(0), PPOConfig())
+    key = jax.random.key(7)
+    buf = collect_rollouts_jax_zoo(env, params, key)
+    assert buf["obs"].shape == (T, S * A, OBS_DIM)
+    assert buf["dones"].sum() == 1.0 and buf["dones"][-1] == 1.0
+
+    ep = env._episode
+    keys = jax.random.split(key, S)
+    env1 = PoolServingEnv(wl, cfg, arrivals=np.zeros((A, T)))
+    for i, sc in enumerate(zoo):
+        arr = sc.build(A, seed=sc.seed + ep, duration_s=T, mean_rps=40.0)
+        cell = collect_rollouts_jax(
+            env1, params, keys[i], arrivals=arr, seed=ep * S + i
+        )
+        for k in ("obs", "actions", "logp", "values", "rewards"):
+            np.testing.assert_array_equal(
+                buf[k][:, i * A:(i + 1) * A], cell[k],
+                err_msg=f"cell {i} key {k}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# Multi-device grid sharding (forced multi-CPU subprocess).
+# ---------------------------------------------------------------------------
+def test_sharded_grid_parity_subprocess():
+    """``run_grid(sharded=True)`` computes the same cells as the single
+    vmapped dispatch.  Device count is a process-level XLA flag, so the
+    2-device mesh runs in a subprocess."""
+    import os
+    import subprocess
+    import sys
+
+    script = r"""
+import numpy as np, jax
+assert len(jax.devices()) == 2, jax.devices()
+from repro.core.sim import jax_engine as je
+from repro.core.sim.types import ArchLoad
+from repro.core.workloads import SCENARIO_ZOO
+ARCHS = ["llama3-8b", "minicpm-2b", "qwen1.5-0.5b"]
+A, T = 3, 120
+wl = [ArchLoad(ARCHS[i % 3], 1.0 / A, 0.25, name=f"m@{i}") for i in range(A)]
+names = ("shared_berkeley", "mmpp_bursts")
+arrs = np.stack([SCENARIO_ZOO[n].build(A, duration_s=T, seed=30 + i)
+                 for i, n in enumerate(names)])
+seeds = [5, 6]
+sh = je.run_grid(arrs, wl, "portfolio", seeds=seeds, sharded=True)
+un = je.run_grid(arrs, wl, "portfolio", seeds=seeds, sharded=False)
+for i in range(len(names)):
+    assert sh[i]["summary"] == un[i]["summary"], (i, sh[i], un[i])
+# auto mode: 2 cells % 2 devices == 0 -> sharded path, same cells
+auto = je.run_grid(arrs, wl, "portfolio", seeds=seeds)
+for i in range(len(names)):
+    assert auto[i]["summary"] == un[i]["summary"], i
+print("SHARDED_PARITY_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
+    ).strip()
+    # the subprocess must resolve the package the same way this one did
+    src = os.path.dirname(os.path.dirname(os.path.abspath(je.__file__)))
+    src = os.path.dirname(os.path.dirname(src))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=env, capture_output=True,
+        text=True, timeout=540,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SHARDED_PARITY_OK" in proc.stdout

@@ -193,6 +193,30 @@ def test_recorder_stride_buckets():
         t1.recorder.tier_active["reserved"][9::10])
 
 
+def test_recorder_allocation_stride_and_dtypes():
+    """The recorder honors the stride at allocation (R = ceil(T/stride)
+    rows, not T) and keeps gauge buffers narrow — observability series
+    are float32/int32 while the reconciliation-bearing flow and cost
+    series stay float64."""
+    rec = TimeSeriesRecorder(256, ticks=3600, stride=60)
+    assert rec.rows == 60
+    for t in rec.tier_names:
+        assert rec.tier_active[t].shape == (60, 256)
+        assert rec.tier_active[t].dtype == np.int32
+        assert rec.tier_pending[t].dtype == np.int32
+    for c in ("strict", "relaxed"):
+        assert rec.queue_depth[c].dtype == np.float32
+        assert rec.queue_age_p99[c].dtype == np.int32
+    assert rec.active_variant.dtype == np.int32
+    assert rec.utilization.dtype == np.float32
+    assert rec.harvest_level.dtype == np.float32
+    # the exactness-bearing series keep full precision
+    for name in TimeSeriesRecorder.FLOW_NAMES:
+        assert rec.flows[name].dtype == np.float64
+    assert rec.tier_cost.dtype == np.float64
+    assert rec.tick.dtype == np.int64
+
+
 def test_recorder_direct_flow_accumulation():
     rec = TimeSeriesRecorder(2, ticks=10, stride=5)
     rec.add_flow(0, "arrived", np.array([1.0, 2.0]))
@@ -377,7 +401,7 @@ def test_retrace_warns_once_per_key():
     wl = uniform_pool_workload(POOL[:2], strict_frac=0.25)
     arr = SCENARIO_ZOO["mmpp_bursts"].build(2, duration_s=60, mean_rps=60.0)
     je.run_scenario(arr, wl, "reactive")
-    key = ("reactive", "sum", False)
+    key = ("reactive", "sum", False, "opt")
     n = je.runner_trace_count(*key)
     assert n >= 1
     # pretend the key was seen at a lower trace count: the next use must

@@ -154,6 +154,16 @@ def decode_actions(actions: np.ndarray) -> tuple:
     return decode_actions_arrays(np.asarray(actions, dtype=np.int64))
 
 
+def variant_targets_arrays(active_variant, n_variants, vmove, xp=np):
+    """Backend-parametric core of :func:`variant_targets`: signed steps
+    clipped to the arch's variant range, hold (-1) where the step lands
+    on the active variant — the expression the in-scan RL decode
+    (``sim/jax_engine.py``) traces so the variant head acts identically
+    in rollout collection and deployment."""
+    tgt = xp.clip(active_variant + vmove, 0, n_variants - 1)
+    return xp.where(tgt == active_variant, -1, tgt).astype(xp.int64)
+
+
 def variant_targets(obs: PoolObs, vmove: np.ndarray) -> np.ndarray:
     """Signed variant steps -> engine ``variant_target`` codes.
 
@@ -161,8 +171,7 @@ def variant_targets(obs: PoolObs, vmove: np.ndarray) -> np.ndarray:
     the active variant (hold, or a clipped edge move) becomes the
     engine's hold code (-1).
     """
-    tgt = np.clip(obs.active_variant + vmove, 0, obs.n_variants - 1)
-    return np.where(tgt == obs.active_variant, -1, tgt).astype(np.int64)
+    return variant_targets_arrays(obs.active_variant, obs.n_variants, vmove)
 
 
 def spot_targets(obs: PoolObs, smove: np.ndarray) -> np.ndarray:

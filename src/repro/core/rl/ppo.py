@@ -205,10 +205,14 @@ def collect_rollouts_jax(env: PoolServingEnv, params, key, *,
     tr = np.asarray(tr, dtype=np.float64)
     A, T = tr.shape
     pol = jax_engine.JAX_POLICIES["rl_sample"]
+    # the env's variant catalog rides into the scan, so the sampled
+    # variant head EXECUTES during collection (swaps change served
+    # accuracy and cost) instead of decaying to a no-op
     statics, state0, xs = jax_engine.build_sim_inputs(
-        tr, env.workload, pricing=cfg.pricing, seed=seed,
-        needs_stats=pol.needs_stats, needs_key=True, key=key,
+        tr, env.workload, pricing=cfg.pricing, catalog=env.catalog,
+        seed=seed, needs_stats=pol.needs_stats, needs_key=True, key=key,
     )
+    variants = "var_smult" in statics
     statics["policy"] = {
         "net": params,
         "rate_scale": cfg.rate_scale,
@@ -218,7 +222,8 @@ def collect_rollouts_jax(env: PoolServingEnv, params, key, *,
     with enable_x64():
         out = jax.tree.map(
             np.asarray,
-            jax_engine._get_runner("rl_sample", mode="stack")(
+            jax_engine._get_runner("rl_sample", mode="stack",
+                                   variants=variants)(
                 statics, state0, xs
             ),
         )
@@ -280,8 +285,10 @@ def collect_rollouts_jax_zoo(env: PoolServingEnv, params, key) -> dict:
     seeds = [ep * S + i for i in range(S)]
     keys = jax.random.split(key, S)
     sim_tmpl = jax_engine.ServingSim(
-        arrs[0], env.workload, pricing=cfg.pricing, seed=seeds[0]
+        arrs[0], env.workload, pricing=cfg.pricing, seed=seeds[0],
+        catalog=env.catalog,
     )
+    variants = sim_tmpl._variants_live
     ew, _, p2 = jax_engine.pool_stats_trajectory(arrs.reshape(S * A, T))
     cells = [
         jax_engine.build_sim_inputs(
@@ -304,7 +311,8 @@ def collect_rollouts_jax_zoo(env: PoolServingEnv, params, key) -> dict:
     with enable_x64():
         out = jax.tree.map(
             np.asarray,
-            jax_engine._get_runner("rl_sample", mode="stack", batched=True)(
+            jax_engine._get_runner("rl_sample", mode="stack", batched=True,
+                                   variants=variants)(
                 statics, policy_b, state0_b, xs_b
             ),
         )

@@ -547,15 +547,105 @@ class VectorPortfolioPolicy(VectorParagonPolicy):
         )
 
 
+# ---------------------------------------------------------------------------
+# Variant decision math, backend-parametric (``xp`` = numpy or jax.numpy).
+# These are the single source of truth for the variant-aware policies:
+# the dict schedulers, the vectorized schedulers below AND the in-scan
+# ``JAX_POLICIES`` twins (``sim/jax_engine.py``) all evaluate the same
+# expressions, so the three implementations cannot drift.  ``o`` maps
+# :class:`PoolObs` field names to ``[A]`` arrays (same convention as
+# ``repro.core.rl.obs.pool_features_arrays``); no jax import happens
+# here — the backend is passed in.
+# ---------------------------------------------------------------------------
+def swap_aware_target_arrays(o, *, bursty_threshold: float,
+                             flat_cushion: float, drain_horizon_s: float,
+                             xp=np):
+    """Paragon sizing against the slower of the active / in-flight
+    variant's service rate (shared by the variant-aware policies)."""
+    bursty = o["peak_to_median"] >= bursty_threshold
+    headroom = xp.where(bursty, 1.0, flat_cushion)
+    demand = o["ewma_rate"] + o["queue_len"] / drain_horizon_s
+    thr = o["throughput"] * xp.minimum(1.0, o["variant_pending_ratio"])
+    return xp.maximum(1, xp.ceil(demand * headroom / thr)).astype(xp.int64)
+
+
+def infaas_variant_move_arrays(o, tick, last_move, *, up_util: float,
+                               down_util: float, post_swap_util: float,
+                               queue_pressure_s: float, cooldown_s: int,
+                               xp=np):
+    """The INFaaS-style up/down variant move as one branchless pass.
+
+    Returns ``(variant_target, new_last_move)``: ``variant_target`` in
+    engine codes (-1 = hold), ``new_last_move`` the updated per-arch
+    cooldown state the caller carries between ticks.  ``down`` and
+    ``up`` are mutually exclusive (pressure vs ~pressure), so the
+    where-chain reproduces the masked-assignment form exactly."""
+    cap = xp.maximum(o["n_active"], 1) * o["throughput"]
+    # queue_len includes this tick's (not yet served) arrivals;
+    # pressure / slack are about the carried-over backlog
+    backlog = o["queue_len"] - o["rate"]
+    pressure = (o["utilization"] >= down_util) | (
+        backlog > queue_pressure_s * cap
+    )
+    slack = (o["utilization"] <= up_util) & (backlog <= 1e-6)
+    ready = (~o["variant_in_flight"]) & (tick - last_move >= cooldown_s)
+    down = (
+        pressure & ready
+        & (o["active_variant"] > o["variant_lo"])
+        & (o["variant_down_ratio"] > 1.0 + 1e-9)
+    )
+    up = (
+        slack & ~pressure & ready
+        & (o["active_variant"] < o["n_variants"] - 1)
+        & (o["utilization"] / o["variant_up_ratio"] <= post_swap_util)
+    )
+    tgt = xp.where(
+        down, o["active_variant"] - 1,
+        xp.where(up, o["active_variant"] + 1, -1),
+    ).astype(xp.int64)
+    new_last_move = xp.where(down | up, tick, last_move)
+    return tgt, new_last_move
+
+
+def accuracy_floor_move_arrays(o, xp=np):
+    """Cocktail-style least-cost selection: move to the cheapest variant
+    meeting the stream's floor (hold while a swap is in flight)."""
+    return xp.where(
+        (~o["variant_in_flight"])
+        & (o["active_variant"] != o["variant_cheapest"]),
+        o["variant_cheapest"],
+        -1,
+    ).astype(xp.int64)
+
+
+def _variant_obs_dict(obs: PoolObs) -> dict:
+    """The ``[A]``-array view of a :class:`PoolObs` the ``*_arrays``
+    variant math consumes."""
+    return {
+        "rate": obs.rate,
+        "ewma_rate": obs.ewma_rate,
+        "peak_to_median": obs.peak_to_median,
+        "queue_len": obs.queue_len,
+        "n_active": obs.n_active,
+        "utilization": obs.utilization,
+        "throughput": obs.throughput,
+        "active_variant": obs.active_variant,
+        "n_variants": obs.n_variants,
+        "variant_lo": obs.variant_lo,
+        "variant_cheapest": obs.variant_cheapest,
+        "variant_in_flight": obs.variant_in_flight,
+        "variant_up_ratio": obs.variant_up_ratio,
+        "variant_down_ratio": obs.variant_down_ratio,
+        "variant_pending_ratio": obs.variant_pending_ratio,
+    }
+
+
 def _swap_aware_target(obs: PoolObs, bursty_threshold: float,
                        flat_cushion: float, drain_horizon_s: float) -> np.ndarray:
-    """Paragon sizing against the slower of the active / in-flight
-    variant's service rate (shared by the variant-aware vector policies)."""
-    bursty = obs.peak_to_median >= bursty_threshold
-    headroom = np.where(bursty, 1.0, flat_cushion)
-    demand = obs.ewma_rate + obs.queue_len / drain_horizon_s
-    thr = obs.throughput * np.minimum(1.0, obs.variant_pending_ratio)
-    return _scale_target_vec(thr, demand, headroom)
+    return swap_aware_target_arrays(
+        _variant_obs_dict(obs), bursty_threshold=bursty_threshold,
+        flat_cushion=flat_cushion, drain_horizon_s=drain_horizon_s,
+    )
 
 
 @dataclass
@@ -578,31 +668,13 @@ class VectorInfaasVariantPolicy(VectorParagonPolicy):
         n = len(obs.keys)
         if self._last_move is None:
             self._last_move = np.full(n, -(10**9), dtype=np.int64)
-        cap = np.maximum(obs.n_active, 1) * obs.throughput
-        # queue_len includes this tick's (not yet served) arrivals;
-        # pressure / slack are about the carried-over backlog
-        backlog = obs.queue_len - obs.rate
-        pressure = (obs.utilization >= self.down_util) | (
-            backlog > self.queue_pressure_s * cap
+        tgt, self._last_move = infaas_variant_move_arrays(
+            _variant_obs_dict(obs), tick, self._last_move,
+            up_util=self.up_util, down_util=self.down_util,
+            post_swap_util=self.post_swap_util,
+            queue_pressure_s=self.queue_pressure_s,
+            cooldown_s=self.cooldown_s,
         )
-        slack = (obs.utilization <= self.up_util) & (backlog <= 1e-6)
-        ready = (~obs.variant_in_flight) & (
-            tick - self._last_move >= self.cooldown_s
-        )
-        down = (
-            pressure & ready
-            & (obs.active_variant > obs.variant_lo)
-            & (obs.variant_down_ratio > 1.0 + 1e-9)
-        )
-        up = (
-            slack & ~pressure & ready
-            & (obs.active_variant < obs.n_variants - 1)
-            & (obs.utilization / obs.variant_up_ratio <= self.post_swap_util)
-        )
-        tgt = np.full(n, -1, dtype=np.int64)
-        tgt[down] = obs.active_variant[down] - 1
-        tgt[up] = obs.active_variant[up] + 1
-        self._last_move = np.where(down | up, tick, self._last_move)
         act.variant_target = tgt
         return act
 
@@ -616,12 +688,7 @@ class VectorAccuracyFloorPolicy(VectorParagonPolicy):
         act.target = _swap_aware_target(
             obs, self.bursty_threshold, self.flat_cushion, self.drain_horizon_s
         )
-        act.variant_target = np.where(
-            (~obs.variant_in_flight)
-            & (obs.active_variant != obs.variant_cheapest),
-            obs.variant_cheapest,
-            -1,
-        ).astype(np.int64)
+        act.variant_target = accuracy_floor_move_arrays(_variant_obs_dict(obs))
         return act
 
 

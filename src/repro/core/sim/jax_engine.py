@@ -93,6 +93,12 @@ from repro.core.load_monitor import (
 from repro.core.rl.obs import (
     pool_features_arrays,
     procurement_targets_arrays,
+    variant_targets_arrays,
+)
+from repro.core.schedulers import (
+    accuracy_floor_move_arrays,
+    infaas_variant_move_arrays,
+    swap_aware_target_arrays,
 )
 from repro.core.rl.policy import (
     load_policy_checkpoint,
@@ -173,6 +179,14 @@ class SimState(NamedTuple):
     rem_ehist: Any = None
     rem_sufmin: Any = None
     rem_bmin: Any = None
+    # model-variant swap pipeline (None on catalog-free runs): the NumPy
+    # SwapPipeline's (current, pending, ready_at) triple — at most one
+    # swap per arch is ever in flight, so the ISSUE's "ring" collapses
+    # to a depth-1 slot and every op is O(A)
+    var_cur: Any = None       # [A] active variant index (i64)
+    var_pending: Any = None   # [A] in-flight swap target, -1 = none (i64)
+    var_ready: Any = None     # [A] tick the in-flight swap matures (i64)
+    var_last_move: Any = None  # [A] variant-policy cooldown state (i64)
 
 
 # ---------------------------------------------------------------------------
@@ -485,7 +499,7 @@ def _net_forward(net, feats):
 
 
 def _rl_action(params, obs, actions):
-    target, offload, spot, _vmove = procurement_targets_arrays(
+    target, offload, spot, vmove = procurement_targets_arrays(
         actions,
         ewma_rate=obs["ewma_rate"],
         queue_strict=obs["queue_strict"],
@@ -496,7 +510,14 @@ def _rl_action(params, obs, actions):
         xp=jnp,
     )
     z = _no_action(target)
-    return dict(target=target, offload=offload, spot=spot, harvest=z, remote=z)
+    # the 3-way variant head, decoded exactly like the host env path
+    # (procurement_action): on catalog-free runs _tick never reads the
+    # "variant" entry and every step clips to the hold code anyway
+    variant = variant_targets_arrays(
+        obs["active_variant"], obs["n_variants"], vmove, xp=jnp
+    )
+    return dict(target=target, offload=offload, spot=spot, harvest=z,
+                remote=z, variant=variant)
 
 
 def _pol_rl_greedy(params, obs, key):
@@ -533,6 +554,45 @@ def _pol_rl_sample(params, obs, key):
     return _rl_action(params, obs, actions), extras
 
 
+def _pol_infaas_variant(params, obs, key):
+    """In-scan twin of ``VectorInfaasVariantPolicy``: Paragon offload +
+    swap-aware sizing + the INFaaS up/down move, all through the shared
+    ``*_arrays`` expressions (``core/schedulers.py``) so the dict,
+    vector and scan forms cannot drift.  The per-arch cooldown state
+    (``_last_move``) rides in the scan carry (``SimState.var_last_move``)
+    and comes back through the action dict."""
+    tgt = swap_aware_target_arrays(
+        obs, bursty_threshold=params["bursty_threshold"],
+        flat_cushion=params["flat_cushion"],
+        drain_horizon_s=params["drain_horizon_s"], xp=jnp,
+    )
+    variant, last_move = infaas_variant_move_arrays(
+        obs, obs["tick"], obs["variant_last_move"],
+        up_util=params["up_util"], down_util=params["down_util"],
+        post_swap_util=params["post_swap_util"],
+        queue_pressure_s=params["queue_pressure_s"],
+        cooldown_s=params["cooldown_s"], xp=jnp,
+    )
+    z = _no_action(tgt)
+    off = jnp.full_like(tgt, _OFFLOAD_SLACK_AWARE)
+    return dict(target=tgt, offload=off, spot=z, harvest=z, remote=z,
+                variant=variant, variant_last_move=last_move), {}
+
+
+def _pol_accuracy_floor(params, obs, key):
+    """In-scan twin of ``VectorAccuracyFloorPolicy``: swap-aware sizing
+    + move to the cheapest floor-satisfying variant."""
+    tgt = swap_aware_target_arrays(
+        obs, bursty_threshold=params["bursty_threshold"],
+        flat_cushion=params["flat_cushion"],
+        drain_horizon_s=params["drain_horizon_s"], xp=jnp,
+    )
+    z = _no_action(tgt)
+    off = jnp.full_like(tgt, _OFFLOAD_SLACK_AWARE)
+    return dict(target=tgt, offload=off, spot=z, harvest=z, remote=z,
+                variant=accuracy_floor_move_arrays(obs, xp=jnp)), {}
+
+
 class JaxPolicy(NamedTuple):
     apply: Callable            # (params, obs, key) -> (actions, extras)
     needs_stats: bool          # True: policy reads peak_to_median
@@ -567,6 +627,18 @@ JAX_POLICIES: Dict[str, JaxPolicy] = {
     ),
     "rl_pool": JaxPolicy(_pol_rl_greedy, True, False, _rl_default_params),
     "rl_sample": JaxPolicy(_pol_rl_sample, True, True, _rl_default_params),
+    "infaas_variant": JaxPolicy(
+        _pol_infaas_variant, True, False,
+        lambda: dict(bursty_threshold=1.5, flat_cushion=1.1,
+                     drain_horizon_s=5.0, up_util=0.55, down_util=0.9,
+                     post_swap_util=0.75, queue_pressure_s=2.0,
+                     cooldown_s=120),
+    ),
+    "accuracy_floor": JaxPolicy(
+        _pol_accuracy_floor, True, False,
+        lambda: dict(bursty_threshold=1.5, flat_cushion=1.1,
+                     drain_horizon_s=5.0),
+    ),
 }
 
 
@@ -593,8 +665,16 @@ def _pipe_of(state: SimState, pre: str, lazy: bool):
     return _Pipe(ring, cum, mat)
 
 
+def _gather_v(table, idx):
+    """Row-wise gather from a padded ``[A, V]`` catalog table at ``[A]``
+    indices (the scan form of ``np.take_along_axis(table, idx[:, None],
+    1)[:, 0]``)."""
+    return jnp.take_along_axis(table, idx[:, None], axis=1)[:, 0]
+
+
 def _tick(state: SimState, xs: dict, st: dict, policy_apply,
-          ewma_in_carry: bool = False, lazy_rings: bool = False):
+          ewma_in_carry: bool = False, lazy_rings: bool = False,
+          variants: bool = False):
     """One engine tick, pure: ``(state, inputs) -> (state, metrics)``.
 
     Mirrors ``ServingSim.observe_pool`` + ``_step`` operation for
@@ -602,7 +682,17 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply,
     exact.  With ``ewma_in_carry`` the monitor's EWMA recurrence runs
     inside the scan (same float64 expression, same operation order as
     :func:`_ewma_trajectory` — bit-identical) instead of arriving as a
-    host-precomputed ``[T, A]`` input."""
+    host-precomputed ``[T, A]`` input.
+
+    ``variants`` is a trace-time switch for the model-variant axis: when
+    False (catalog-free) none of the swap machinery is traced, so the
+    compiled graph is IDENTICAL to the variant-blind engine's — base
+    runs stay bit-for-bit what they were.  When True the tick follows
+    the NumPy ordering exactly: the observation gathers at the PRE-pop
+    active variant, due swaps land before serving (the arch serves this
+    tick at the NEW rate), new requests enter the depth-1 pipeline after
+    the pop, and serving / burst billing / accuracy / chip accounting
+    all gather at the POST-pop variant."""
     t = xs["t"]
     rate = xs["rate"]
     A = rate.shape[0]
@@ -626,6 +716,50 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply,
     qs_tot = qs_buf[:, -1]
     qr_tot = qr_buf[:, -1]
 
+    # ---- variant observation (pre-pop, like the NumPy observe_pool:
+    # due swaps have NOT landed yet, so ratios and throughput gather at
+    # the carried active variant; catalog-free every entry aliases a
+    # read-only static and no gather is traced) ------------------------
+    if variants:
+        v_cur = state.var_cur
+        v_pend = state.var_pending
+        smult_cur = _gather_v(st["var_smult"], v_cur)
+        v_up = jnp.minimum(v_cur + 1, st["var_n"] - 1)
+        v_dn = jnp.maximum(v_cur - 1, 0)
+        vobs = {
+            "throughput": st["thr"] * smult_cur,
+            "active_variant": v_cur,
+            "n_variants": st["var_n"],
+            "accuracy": _gather_v(st["var_acc"], v_cur),
+            "accuracy_floor": st["acc_floor"],
+            "variant_lo": st["var_lo"],
+            "variant_cheapest": st["var_cheapest"],
+            "variant_in_flight": v_pend >= 0,
+            "variant_up_ratio": _gather_v(st["var_smult"], v_up) / smult_cur,
+            "variant_down_ratio": _gather_v(st["var_smult"], v_dn) / smult_cur,
+            "variant_pending_ratio": jnp.where(
+                v_pend >= 0,
+                _gather_v(st["var_smult"], jnp.maximum(v_pend, 0)) / smult_cur,
+                1.0,
+            ),
+            "variant_last_move": state.var_last_move,
+        }
+    else:
+        vobs = {
+            "throughput": st["thr"],
+            "active_variant": st["zeros_i"],
+            "n_variants": st["ones_i"],
+            "accuracy": st["cur_acc"],
+            "accuracy_floor": st["acc_floor"],
+            "variant_lo": st["zeros_i"],
+            "variant_cheapest": st["zeros_i"],
+            "variant_in_flight": st["false_b"],
+            "variant_up_ratio": st["ones_f"],
+            "variant_down_ratio": st["ones_f"],
+            "variant_pending_ratio": st["ones_f"],
+            "variant_last_move": st["neg_i"],
+        }
+
     # ---- observe: the traced PoolObs (pre-provision state, like the
     # NumPy observe_pool; idle-tier fields equal the static zeros the
     # NumPy engine serves because a dead tier's state IS zero) ---------
@@ -644,19 +778,52 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply,
         "n_harvest_pending": (state.harv_cum - state.harv_mat).astype(jnp.int64),
         "n_remote": state.rem_active,
         "n_remote_pending": (state.rem_cum - state.rem_mat).astype(jnp.int64),
-        "throughput": st["thr"],
         "utilization": state.last_util,
         "last_violations": state.last_viol,
         "harvest_level": jnp.broadcast_to(xs["h_lev_obs"], (A,)),
         "harvest_ceiling": jnp.broadcast_to(xs["h_ceil_obs"], (A,)),
         "spot_reclaim_risk": st["risk"],
-        "active_variant": st["zeros_i"],
-        "n_variants": st["ones_i"],
-        "accuracy": st["cur_acc"],
-        "accuracy_floor": st["acc_floor"],
+        "tick": t,
         "prev_rate": state.prev_rate,
+        **vobs,
     }
     acts, extras = policy_apply(st["policy"], obs, xs.get("key"))
+
+    # ---- variant swaps (ServingSim._step order): pop matured swaps
+    # BEFORE provisioning/serving — the arch serves this tick at the new
+    # rate — then enqueue this tick's requests into the depth-1 slot
+    # (cancel-newest = one overwrite, exactly SwapPipeline.request) ----
+    if variants:
+        done = (v_pend >= 0) & (state.var_ready <= t)
+        v_cur = jnp.where(done, v_pend, v_cur)
+        v_pend = jnp.where(done, -1, v_pend)
+        swaps = done.sum()
+        # POST-pop effective serving state (what _refresh_variant_state
+        # caches on the NumPy engine): serve, bill burst invocations and
+        # account chips at the NEW variant from this tick on
+        cur_acc = _gather_v(st["var_acc"], v_cur)
+        thr = st["thr"] * _gather_v(st["var_smult"], v_cur)
+        chips = st["chips"] * _gather_v(st["var_cmult"], v_cur)
+        st_off = dict(
+            st,
+            lat_b1=st["lat_b1"] * _gather_v(st["var_lmult"], v_cur),
+            burst_cpr=(chips / thr) * st["burst_chip_s"] + st["inv_fee"],
+        )
+        # request: re-targeting the current variant cancels the in-flight
+        # swap; re-requesting the in-flight target leaves its clock
+        # alone; anything else (re)starts the slot
+        req = jnp.minimum(acts.get("variant", st["neg_i"]), st["var_n"] - 1)
+        cancel = (req >= 0) & (req == v_cur)
+        v_pend = jnp.where(cancel, -1, v_pend)
+        start = (req >= 0) & (req != v_cur) & (req != v_pend)
+        v_pend = jnp.where(start, req, v_pend)
+        v_ready = jnp.where(start, t + st["swap_lat"], state.var_ready)
+        v_last_move = acts.get("variant_last_move", state.var_last_move)
+    else:
+        thr = st["thr"]
+        chips = st["chips"]
+        cur_acc = st["cur_acc"]
+        st_off = st
 
     # ---- provision (reserved, then aux in registration order).  Each
     # tier's ring slot for this tick is t mod L (L static per tier) ----
@@ -692,7 +859,6 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply,
 
     # ---- serve: local capacity first (strict priority), then the
     # remote group against its egress-tightened lateness prefixes ------
-    thr = st["thr"]
     cap_local = (res_active + spot_active + harv_active) * thr
     qs_buf, served_s, late_s = _serve(qs_buf, cap_local, st["late_s"])
     rem_cap = rem_active * thr
@@ -717,10 +883,11 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply,
     # only), sequential so the relaxed batch sees a warmed pool --------
     offload = acts["offload"]
     qs_buf, counts_s, bviol_s, bcost_s, last_used = _offload(
-        qs_buf, offload >= 1, state.burst_last_used, t, st["slo_strict"], st,
+        qs_buf, offload >= 1, state.burst_last_used, t, st["slo_strict"],
+        st_off,
     )
     qr_buf, counts_r, bviol_r, bcost_r, last_used = _offload(
-        qr_buf, offload == 1, last_used, t, st["slo_relaxed"], st,
+        qr_buf, offload == 1, last_used, t, st["slo_relaxed"], st_off,
     )
     viol_arch = viol_arch + bviol_s + bviol_r
     viol_strict = viol_strict + bviol_s.sum()
@@ -737,11 +904,10 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply,
 
     # ---- delivered accuracy ------------------------------------------
     answered = served + counts_s + counts_r + dropped
-    acc_w = answered * st["cur_acc"]
-    acc_viol = answered * (st["cur_acc"] < st["acc_floor"] - 1e-12)
+    acc_w = answered * cur_acc
+    acc_viol = answered * (cur_acc < st["acc_floor"] - 1e-12)
 
     # ---- account ------------------------------------------------------
-    chips = st["chips"]
     ch_res = res_active * chips
     ch_spot = spot_active * chips
     ch_harv = harv_active * chips
@@ -769,6 +935,21 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply,
             lazy_kw[pre + "_ehist"] = pipe.ehist
             lazy_kw[pre + "_sufmin"] = pipe.sufmin
             lazy_kw[pre + "_bmin"] = pipe.bmin
+    var_ys = {}
+    if variants:
+        lazy_kw.update(var_cur=v_cur, var_pending=v_pend,
+                       var_ready=v_ready, var_last_move=v_last_move)
+        var_ys = {
+            # "swaps" is a flow (summed into the ledger); the rest are
+            # per-tick gauges matching the NumPy recorder's end_tick
+            # sampling points: active variant post-pop (swap.current),
+            # in-flight post-request (swap.in_flight), delivered
+            # accuracy at the serving variant (cur_acc)
+            "swaps": swaps,
+            "active_variant": v_cur,
+            "swap_in_flight": v_pend >= 0,
+            "acc_rate": cur_acc,
+        }
     new_state = SimState(
         qs_buf=qs_buf, qr_buf=qr_buf,
         res_active=res_active,
@@ -815,6 +996,7 @@ def _tick(state: SimState, xs: dict, st: dict, policy_apply,
         "n_rem": rem_active,
         "queue_strict": qs_buf[:, -1],
         "queue_relaxed": qr_buf[:, -1],
+        **var_ys,
         **extras,
     }
     return new_state, ys
@@ -855,6 +1037,7 @@ def build_sim_inputs(
     workload: List[ArchLoad],
     *,
     pricing: FleetPricing = PRICING,
+    catalog=None,
     seed: int = 0,
     prewarm: bool = True,
     warm_start: bool = True,
@@ -894,11 +1077,9 @@ def build_sim_inputs(
     A, T = arrivals.shape
     sim = _sim if _sim is not None else ServingSim(
         arrivals, workload, pricing=pricing, prewarm=prewarm,
-        warm_start=warm_start, seed=seed,
+        warm_start=warm_start, seed=seed, catalog=catalog,
     )
-    assert not sim._variants_live, (
-        "the JAX engine covers the single-variant pipeline (no catalog)"
-    )
+    variants = sim._variants_live
 
     if ewma_in_scan is None:
         ewma_in_scan = not needs_stats
@@ -948,8 +1129,31 @@ def build_sim_inputs(
         "risk": np.full(A, sim.spot.reclaim_probability()),
         "zeros_i": np.zeros(A, dtype=np.int64),
         "ones_i": np.ones(A, dtype=np.int64),
+        "false_b": np.zeros(A, dtype=bool),
+        "ones_f": np.ones(A, dtype=np.float64),
+        # the hold sentinel for variant requests / cooldown clocks (any
+        # value far below tick 0 works; matches the vector schedulers)
+        "neg_i": np.full(A, -(10 ** 9), dtype=np.int64),
         "policy": {},            # caller / run_scenario fills this in
     }
+    if variants:
+        # the scan gathers effective quantities per tick, so the serving
+        # statics revert to BASE values and the padded catalog rides in
+        statics.update(
+            thr=sim.throughput,
+            chips=sim.chips,
+            lat_b1=sim.lat_b1,
+            var_acc=sim.var_acc,
+            var_smult=sim.var_smult,
+            var_cmult=sim.var_cmult,
+            var_lmult=sim.var_lmult,
+            var_n=sim.var_n,
+            var_lo=sim.var_lo,
+            var_cheapest=sim.var_cheapest,
+            swap_lat=np.int64(sim.swap.lat),
+            burst_chip_s=float(pricing.burst_chip_s),
+            inv_fee=float(pricing.burst_invocation_fee),
+        )
     if warm_start:
         # the sim's own warm-start rule, recomputed so a reused _sim
         # still yields THIS cell's t=0 fleet
@@ -983,6 +1187,17 @@ def build_sim_inputs(
         prev_rate=arrivals[:, 0].copy(),         # trend feature = 0 at t=0
         # the t=0 value is recomputed in-scan; this seeds dtype/shape
         ewma=arrivals[:, 0].copy() if ewma_in_scan else None,
+        # variant axis: start at the base variant with an empty swap
+        # slot and a cooldown clock that never blocks the first move
+        **(
+            dict(
+                var_cur=sim.swap.current.astype(np.int64),
+                var_pending=np.full(A, -1, dtype=np.int64),
+                var_ready=np.zeros(A, dtype=np.int64),
+                var_last_move=np.full(A, -(10 ** 9), dtype=np.int64),
+            )
+            if variants else {}
+        ),
         # lazy-ring window-min state: "no events yet" is +inf everywhere
         **(
             {
@@ -1066,15 +1281,18 @@ _RUNNERS: Dict[tuple, Any] = {}
 #: the ``mode="stack"`` trajectory path — excluded from the in-graph
 #: "sum" reduction, where their totals would be meaningless tick-seconds
 GAUGE_KEYS = frozenset(
-    ("n_res", "n_spot", "n_harv", "n_rem", "queue_strict", "queue_relaxed")
+    ("n_res", "n_spot", "n_harv", "n_rem", "queue_strict", "queue_relaxed",
+     "active_variant", "swap_in_flight", "acc_rate")
 )
 
 #: metric keys reduced by the in-carry accumulator ("sum" mode); the
-#: per-tick liveness flags fold with logical-or instead of ``+``
+#: per-tick liveness flags fold with logical-or instead of ``+``.
+#: "swaps" only exists on variant-catalog runs — the accumulator keys
+#: are filtered by presence in the tick's output shape
 _SUM_KEYS = (
     "served", "burst", "dropped", "viol", "viol_strict", "acc_w",
     "acc_viol", "cost_arch", "cost_res", "cost_spot", "cost_harv",
-    "cost_rem", "cost_burst", "preempt", "chip", "need", "over",
+    "cost_rem", "cost_burst", "preempt", "chip", "need", "over", "swaps",
 )
 _LIVE_KEYS = ("harv_live", "rem_live")
 
@@ -1088,7 +1306,7 @@ SCAN_UNROLL = 1
 
 def make_runner(policy_apply, mode: str = "sum", *, unroll: int = 1,
                 ewma_in_carry: bool = False, accumulate: bool = False,
-                lazy_rings: bool = False):
+                lazy_rings: bool = False, variants: bool = False):
     """Build ``run(statics, state0, xs) -> out`` around one policy.
 
     ``mode="sum"`` reduces the per-tick metrics (scenario evaluation);
@@ -1109,18 +1327,18 @@ def make_runner(policy_apply, mode: str = "sum", *, unroll: int = 1,
             x0 = jax.tree.map(lambda a: a[0], xs)
             ys_shape = jax.eval_shape(
                 lambda s, x: _tick(s, x, statics, policy_apply,
-                                   ewma_in_carry, lazy_rings)[1],
+                                   ewma_in_carry, lazy_rings, variants)[1],
                 state0, x0,
             )
             acc0 = {
                 k: jnp.zeros(ys_shape[k].shape, ys_shape[k].dtype)
-                for k in _SUM_KEYS + _LIVE_KEYS
+                for k in _SUM_KEYS + _LIVE_KEYS if k in ys_shape
             }
 
             def f(carry, x):
                 state, acc = carry
                 state, ys = _tick(state, x, statics, policy_apply,
-                                  ewma_in_carry, lazy_rings)
+                                  ewma_in_carry, lazy_rings, variants)
                 acc = {
                     k: (acc[k] | ys[k]) if k in _LIVE_KEYS
                     else acc[k] + ys[k]
@@ -1138,7 +1356,7 @@ def make_runner(policy_apply, mode: str = "sum", *, unroll: int = 1,
 
         def f(carry, x):
             return _tick(carry, x, statics, policy_apply, ewma_in_carry,
-                         lazy_rings)
+                         lazy_rings, variants)
 
         final, ys = lax.scan(f, state0, xs, unroll=unroll)
         out = {
@@ -1187,7 +1405,7 @@ def _flavor_opts(policy: str, mode: str, flavor: str) -> dict:
 
 
 def _get_sharded_runner(policy: str, mesh, mode: str = "sum",
-                        flavor: str = "opt"):
+                        flavor: str = "opt", variants: bool = False):
     """The batched grid runner wrapped in ``shard_map``: the leading
     cell axis splits across ``mesh``'s devices (pure data parallelism —
     cells never communicate), statics stay replicated.  The logical
@@ -1199,11 +1417,12 @@ def _get_sharded_runner(policy: str, mesh, mode: str = "sum",
     from repro.distributed.sharding import AxisRules, logical_to_spec
 
     ndev = mesh.devices.size
-    key = (policy, mode, "sharded", ndev, flavor)
+    key = (policy, mode, "sharded", ndev, flavor, variants)
     if key not in _RUNNERS:
         opts = _flavor_opts(policy, mode, flavor)
         opts["lazy_rings"] = False          # vmapped inside shard_map
-        base = make_runner(JAX_POLICIES[policy].apply, mode, **opts)
+        base = make_runner(JAX_POLICIES[policy].apply, mode,
+                           variants=variants, **opts)
 
         def grid(statics, policy_params, state0, xs):
             return base({**statics, "policy": policy_params}, state0, xs)
@@ -1225,13 +1444,14 @@ def _get_sharded_runner(policy: str, mesh, mode: str = "sum",
 
 
 def _get_runner(policy: str, mode: str = "sum", batched: bool = False,
-                flavor: str = "opt"):
-    key = (policy, mode, batched, flavor)
+                flavor: str = "opt", variants: bool = False):
+    key = (policy, mode, batched, flavor, variants)
     if key not in _RUNNERS:
         opts = _flavor_opts(policy, mode, flavor)
         if batched:
             opts["lazy_rings"] = False
-        base = make_runner(JAX_POLICIES[policy].apply, mode, **opts)
+        base = make_runner(JAX_POLICIES[policy].apply, mode,
+                           variants=variants, **opts)
         if batched:
             # one statics pytree serves every cell (grid cells share a
             # workload); only policy params, state and per-tick inputs
@@ -1255,10 +1475,11 @@ def _get_runner(policy: str, mode: str = "sum", batched: bool = False,
 
 
 def runner_trace_count(policy: str, mode: str = "sum",
-                       batched: bool = False, flavor: str = "opt") -> int:
+                       batched: bool = False, flavor: str = "opt",
+                       variants: bool = False) -> int:
     """How many distinct shapes the cached runner has traced (the
     recompile guard: repeated same-shape runs must report 1)."""
-    fn = _RUNNERS.get((policy, mode, batched, flavor))
+    fn = _RUNNERS.get((policy, mode, batched, flavor, variants))
     return 0 if fn is None else fn._cache_size()
 
 
@@ -1271,12 +1492,13 @@ _TRACE_WARNED: set = set()
 
 
 def note_runner_use(policy: str, mode: str = "sum",
-                    batched: bool = False, flavor: str = "opt") -> int:
+                    batched: bool = False, flavor: str = "opt",
+                    variants: bool = False) -> int:
     """Record a runner dispatch: export its trace count as a telemetry
     counter and warn (once per key) if it retraced for an already-seen
     ``(policy, mode, batched)`` key.  Returns the current trace count."""
-    key = (policy, mode, batched, flavor)
-    n = runner_trace_count(policy, mode, batched, flavor)
+    key = (policy, mode, batched, flavor, variants)
+    n = runner_trace_count(policy, mode, batched, flavor, variants)
     telemetry.set_global_counter(
         f'jax_runner_traces_total{{policy="{policy}",mode="{mode}",'
         f'batched="{int(batched)}"}}', n)
@@ -1344,7 +1566,9 @@ def _assemble(out: dict, arrivals: np.ndarray) -> dict:
         summary["acc_violation_rate"] = round(
             float(tot["acc_viol"].sum()) / max(answered, 1e-9), 5
         )
-        summary["variant_swaps"] = 0
+        summary["variant_swaps"] = (
+            int(tot["swaps"]) if "swaps" in tot else 0
+        )
 
     final: SimState = out["final"]
     per_arch = {
@@ -1383,6 +1607,7 @@ def run_scenario(
     params: Optional[dict] = None,
     *,
     pricing: FleetPricing = PRICING,
+    catalog=None,
     seed: int = 0,
     prewarm: bool = True,
     warm_start: bool = True,
@@ -1392,22 +1617,34 @@ def run_scenario(
     "per_arch", "raw"}`` with the summary shaped exactly like
     ``SimResult.summary()`` from the NumPy engine.
 
+    ``catalog`` switches on the model-variant axis: the scan carries the
+    per-arch swap pipeline and gathers effective serving state from the
+    padded catalog tables every tick (see :func:`_tick`); without one
+    the compiled graph is the variant-blind engine's, unchanged.
+
     ``record_trajectory=True`` runs the ``mode="stack"`` runner instead
     and adds a ``"trajectory"`` entry: the per-tick ``[T, ...]`` series
     of every scan output (served / burst / violation flows, per-tier
-    cost and fleet gauges, queue totals) — the JAX-side counterpart of
-    the NumPy engine's telemetry recorder."""
+    cost and fleet gauges, queue totals, and — on catalog runs — the
+    variant gauges ``active_variant`` / ``swap_in_flight`` /
+    ``acc_rate``) — the JAX-side counterpart of the NumPy engine's
+    telemetry recorder."""
     pol = JAX_POLICIES[policy]
     statics, state0, xs = build_sim_inputs(
-        arrivals, workload, pricing=pricing, seed=seed, prewarm=prewarm,
-        warm_start=warm_start, needs_stats=pol.needs_stats,
+        arrivals, workload, pricing=pricing, catalog=catalog, seed=seed,
+        prewarm=prewarm, warm_start=warm_start, needs_stats=pol.needs_stats,
         needs_key=pol.needs_key,
     )
+    variants = "var_smult" in statics
     statics["policy"] = pol.default_params() if params is None else params
     mode = "stack" if record_trajectory else "sum"
     with enable_x64():
-        out = _tree_to_host(_get_runner(policy, mode=mode)(statics, state0, xs))
-    note_runner_use(policy, mode)
+        out = _tree_to_host(
+            _get_runner(policy, mode=mode, variants=variants)(
+                statics, state0, xs
+            )
+        )
+    note_runner_use(policy, mode, variants=variants)
     trajectory = None
     if record_trajectory:
         trajectory = out.pop("ys")
@@ -1428,6 +1665,7 @@ def run_grid(
     seeds: Optional[List[int]] = None,
     *,
     pricing: FleetPricing = PRICING,
+    catalog=None,
     prewarm: bool = True,
     warm_start: bool = True,
     sharded: Optional[bool] = None,
@@ -1456,8 +1694,9 @@ def run_grid(
     # so the batched pass is bit-identical to B per-cell passes)
     sim = ServingSim(
         arrivals_batch[0], workload, pricing=pricing, prewarm=prewarm,
-        warm_start=warm_start, seed=seeds[0],
+        warm_start=warm_start, seed=seeds[0], catalog=catalog,
     )
+    variants = sim._variants_live
     if pol.needs_stats:
         ew, _, p2 = pool_stats_trajectory(arrivals_batch.reshape(B * A, T))
         stats = [
@@ -1492,12 +1731,12 @@ def run_grid(
             f"sharded run_grid needs the cell count ({B}) to divide the "
             f"device count ({1 if mesh is None else mesh.devices.size})"
         )
-        runner = _get_sharded_runner(policy, mesh)
+        runner = _get_sharded_runner(policy, mesh, variants=variants)
     else:
-        runner = _get_runner(policy, batched=True)
+        runner = _get_runner(policy, batched=True, variants=variants)
     with enable_x64():
         out = _tree_to_host(runner(statics, policy_b, state0_b, xs_b))
-    note_runner_use(policy, batched=True)
+    note_runner_use(policy, batched=True, variants=variants)
     return [
         _assemble(_tree_index(out, i), arrivals_batch[i]) for i in range(B)
     ]

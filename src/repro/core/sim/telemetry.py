@@ -194,6 +194,7 @@ class TimeSeriesRecorder:
         self.tier_cost = np.zeros((R, len(TIER_ORDER)))
         self.active_variant = np.zeros((R, A), np.int32)
         self.swap_in_flight = np.zeros((R, A), bool)
+        self.acc_rate = np.zeros((R, A), np.float32)
         self.utilization = np.zeros((R, A), np.float32)
         self.harvest_level = np.zeros(R, np.float32)
         self._touched = 0                    # rows actually written
@@ -234,6 +235,7 @@ class TimeSeriesRecorder:
         out["tier_cost"] = self.tier_cost[:n].copy()
         out["active_variant"] = self.active_variant[:n].copy()
         out["swap_in_flight"] = self.swap_in_flight[:n].copy()
+        out["acc_rate"] = self.acc_rate[:n].copy()
         out["utilization"] = self.utilization[:n].copy()
         out["harvest_level"] = self.harvest_level[:n].copy()
         return out
@@ -404,6 +406,9 @@ class Telemetry:
             rec.queue_age_p99[cls][r] = q.age_quantile(tick, 0.99)
         rec.active_variant[r] = sim.swap.current
         rec.swap_in_flight[r] = sim.swap.in_flight
+        # delivered-accuracy rate at the serving (post-pop) variant —
+        # name-aligned with the JAX trajectory gauge "acc_rate"
+        rec.acc_rate[r] = sim.cur_acc
         rec.utilization[r] = sim.last_util
         rec.harvest_level[r] = sim.harvest.level
 

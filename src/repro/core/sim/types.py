@@ -410,7 +410,16 @@ class PoolObs:
     array aligned with ``keys``.  Field meanings match :class:`ArchObs`;
     the tail fields below the line have no dict counterpart — they are
     the per-class queue split and last-tick violation feedback the
-    pool-wide RL controller's feature vector needs."""
+    pool-wide RL controller's feature vector needs.
+
+    .. warning:: **Aliasing contract.**  ``ServingSim.observe_pool``
+       returns engine-OWNED buffers, refilled in place every tick to
+       keep the hot loop allocation-free.  A ``PoolObs`` is therefore
+       valid only until the next ``observe_pool`` call: a policy that
+       retains one across ticks will see its arrays silently mutate
+       under it.  Schedulers that need history must call :meth:`copy`
+       (or copy individual fields out) before the next tick.
+    """
 
     keys: List[str]
     rate: np.ndarray
@@ -446,6 +455,20 @@ class PoolObs:
     variant_up_ratio: Optional[np.ndarray] = None   # smult(next up) / smult(cur)
     variant_down_ratio: Optional[np.ndarray] = None  # smult(next down) / smult(cur)
     variant_pending_ratio: Optional[np.ndarray] = None  # smult(pending) / smult(cur)
+
+    def copy(self) -> "PoolObs":
+        """A deep, caller-owned snapshot safe to retain across ticks
+        (see the aliasing contract in the class docstring)."""
+        import dataclasses as _dc
+
+        return PoolObs(**{
+            f.name: (
+                v.copy() if isinstance(v, np.ndarray) else
+                list(v) if f.name == "keys" else v
+            )
+            for f in _dc.fields(self)
+            for v in (getattr(self, f.name),)
+        })
 
 
 @dataclass

@@ -53,8 +53,8 @@ def _workload(A):
     ]
 
 
-def _numpy_run(arrivals, workload, policy, seed=0):
-    sim = ServingSim(arrivals, workload, seed=seed)
+def _numpy_run(arrivals, workload, policy, seed=0, catalog=None):
+    sim = ServingSim(arrivals, workload, seed=seed, catalog=catalog)
     if policy == "rl_pool":
         from repro.core.rl.policy import RLPoolPolicy
         pol = RLPoolPolicy(greedy=True)
@@ -111,9 +111,10 @@ def _raw_ledger_jx(out):
     }
 
 
-def _assert_equivalent(arrivals, workload, policy, seed=0):
-    sim = _numpy_run(arrivals, workload, policy, seed=seed)
-    out = je.run_scenario(arrivals, workload, policy, seed=seed)
+def _assert_equivalent(arrivals, workload, policy, seed=0, catalog=None):
+    sim = _numpy_run(arrivals, workload, policy, seed=seed, catalog=catalog)
+    out = je.run_scenario(arrivals, workload, policy, seed=seed,
+                          catalog=catalog)
     raw_np = _raw_ledger_np(sim.res)
     raw_jx = _raw_ledger_jx(out)
     for k in _LEDGER_KEYS:
@@ -125,6 +126,12 @@ def _assert_equivalent(arrivals, workload, policy, seed=0):
     # rounding ulp apart from summation order — the raw check above is
     # the strict one)
     assert set(out["summary"]) == set(sim.res.summary())
+    if catalog is not None:
+        # swaps-in-flight accounting: the scan's popped-swap count is an
+        # exact integer flow, so it must match the oracle exactly
+        assert out["summary"]["variant_swaps"] == (
+            sim.res.summary()["variant_swaps"]
+        ), f"{policy}: variant_swaps drifted"
     # per-arch flow totals line up with the oracle's
     counts = sim.per_arch_counts()
     per = out["per_arch"]
@@ -215,6 +222,253 @@ def test_flow_conservation_per_arch():
 
 
 # ---------------------------------------------------------------------------
+# Variant axis: catalog-enabled differential fuzz + swap edge cases.
+# ---------------------------------------------------------------------------
+def _vworkload(floor=0.55):
+    import dataclasses
+
+    from repro.core.sim import uniform_pool_workload
+    pool = ["llama3-8b", "qwen1.5-0.5b", "rwkv6-1.6b", "minicpm-2b"]
+    return [
+        dataclasses.replace(w, min_accuracy=floor)
+        for w in uniform_pool_workload(pool, strict_frac=0.25)
+    ]
+
+
+@pytest.fixture(scope="module")
+def vcatalog():
+    from repro.core.sim import VariantCatalog
+    return VariantCatalog.for_workload(_vworkload())
+
+
+def test_smoke_fuzz_variant_catalog(vcatalog):
+    """CI subset: both variant-aware schedulers on a catalog run must
+    match the NumPy oracle — swaps, accuracy mass and money included."""
+    wl = _vworkload()
+    arr = SCENARIO_ZOO["diurnal_phases"].build(
+        len(wl), duration_s=400, mean_rps=400.0, seed=3
+    )
+    for policy in ("infaas_variant", "accuracy_floor"):
+        out = _assert_equivalent(arr, wl, policy, seed=0, catalog=vcatalog)
+        assert out["summary"]["variant_swaps"] > 0, (
+            f"{policy}: catalog run never swapped — edge not exercised"
+        )
+
+
+def test_fuzz_variant_zoo(vcatalog):
+    """Every zoo scenario under both variant-aware schedulers, plus the
+    RL policy's live variant head, at 1e-6 on the raw ledger."""
+    wl = _vworkload()
+    swapped = 0
+    for i, scn in enumerate(sorted(SCENARIO_ZOO)):
+        arr = SCENARIO_ZOO[scn].build(
+            len(wl), duration_s=300, mean_rps=300.0, seed=40 + i
+        )
+        for policy in ("infaas_variant", "accuracy_floor"):
+            out = _assert_equivalent(arr, wl, policy, seed=i,
+                                     catalog=vcatalog)
+            swapped += out["summary"]["variant_swaps"]
+    assert swapped > 0
+    arr = SCENARIO_ZOO["trending_hotswap"].build(
+        len(wl), duration_s=400, mean_rps=300.0, seed=11
+    )
+    _assert_equivalent(arr, wl, "rl_pool", seed=1, catalog=vcatalog)
+
+
+def test_variant_flow_and_accuracy_conservation(vcatalog):
+    """Per-arch flow conservation and accuracy-mass bounds hold on a
+    catalog run exactly as on the base engine."""
+    wl = _vworkload()
+    arr = SCENARIO_ZOO["flash_anti"].build(
+        len(wl), duration_s=500, mean_rps=350.0, seed=5
+    )
+    out = je.run_scenario(arr, wl, "infaas_variant", catalog=vcatalog)
+    per = out["per_arch"]
+    answered = per["served_vm"] + per["served_burst"] + per["dropped"]
+    np.testing.assert_allclose(
+        per["arrived"],
+        answered + per["expired_end"] + per["queued"],
+        rtol=1e-9, atol=1e-6,
+    )
+    assert (per["acc_weight"] >= -1e-9).all()
+    assert (per["acc_weight"] <= answered + 1e-6).all()
+    assert (per["acc_violations"] <= answered + 1e-6).all()
+
+
+def test_variant_policies_degrade_catalog_free():
+    """Catalog-free, the in-scan variant-aware schedulers degrade to
+    exactly Paragon (same guarantee the vector forms pin) — and the
+    whole variant machinery stays untraced."""
+    A = 4
+    wl = _workload(A)
+    arr = SCENARIO_ZOO["mmpp_bursts"].build(A, duration_s=300, seed=2)
+    p = je.run_scenario(arr, wl, "paragon", seed=0)["summary"]
+    for policy in ("infaas_variant", "accuracy_floor"):
+        assert je.run_scenario(arr, wl, policy, seed=0)["summary"] == p
+
+
+# --- scripted swap edge cases, pinned against the NumPy engine --------------
+def _scripted_parity(arr, wl, catalog, np_policy, jax_apply, seed=0):
+    """Run a scripted action sequence through BOTH engines and compare
+    the raw ledgers at 1e-6 (the harness behind the swap edge tests)."""
+    import jax.numpy as jnp  # noqa: F401  (closures use it)
+
+    sim = ServingSim(arr, wl, seed=seed, catalog=catalog)
+    while not sim.done:
+        sim.apply_pool(np_policy(sim.tick, sim.observe_pool()))
+    statics, state0, xs = je.build_sim_inputs(
+        arr, wl, catalog=catalog, seed=seed, needs_stats=True,
+        lazy_rings=False,
+    )
+    statics["policy"] = {}
+    from jax.experimental import enable_x64
+    run = jax.jit(je.make_runner(jax_apply, "sum", variants=True))
+    with enable_x64():
+        out = jax.tree.map(np.asarray, run(statics, state0, xs))
+    res = je._assemble(out, np.asarray(arr, dtype=np.float64))
+    raw_np, raw_jx = _raw_ledger_np(sim.res), _raw_ledger_jx(res)
+    for k in _LEDGER_KEYS:
+        assert raw_jx[k] == pytest.approx(raw_np[k], rel=1e-6, abs=1e-6), (
+            f"scripted: raw ledger key {k!r} drifted "
+            f"(np={raw_np[k]!r} jax={raw_jx[k]!r})"
+        )
+    assert res["summary"]["variant_swaps"] == (
+        sim.res.summary()["variant_swaps"]
+    )
+    return sim, res
+
+
+def _scripted_pair(variant_script_np, spot=0, harvest=0):
+    """Matching (NumPy policy, JAX apply) for a reactive-sized fleet
+    with a tick-scripted variant request stream."""
+    from repro.core.sim import PoolAction
+
+    def np_policy(tick, obs):
+        tgt = np.maximum(
+            1, np.ceil(obs.ewma_rate / obs.throughput)
+        ).astype(np.int64)
+        A = len(obs.keys)
+        act = PoolAction(target=tgt)
+        act.variant_target = variant_script_np(tick, A)
+        if spot:
+            act.spot_target = np.full(A, spot, dtype=np.int64)
+        if harvest:
+            act.harvest_target = np.full(A, harvest, dtype=np.int64)
+        return act
+
+    def jax_apply(params, obs, key):
+        import jax.numpy as jnp
+        tgt = jnp.maximum(
+            1, jnp.ceil(obs["ewma_rate"] / obs["throughput"])
+        ).astype(jnp.int64)
+        z = jnp.zeros_like(tgt)
+        t = obs["tick"]
+        A = tgt.shape[0]
+        # trace the SAME script: variant_script_np is evaluated per tick
+        # on the host into a [T, A] table is impossible in-scan, so the
+        # scripts below are written as jnp expressions of t
+        variant = variant_script_np(t, A, xp=jnp)
+        return dict(
+            target=tgt, offload=z,
+            spot=jnp.full_like(tgt, spot) if spot else z,
+            harvest=jnp.full_like(tgt, harvest) if harvest else z,
+            remote=z, variant=variant,
+        ), {}
+
+    return np_policy, jax_apply
+
+
+def test_swap_retarget_to_current_cancels(vcatalog):
+    """Re-targeting the CURRENT variant while a swap is in flight
+    cancels it (the in-flight swap never lands); a later re-request
+    completes.  Scripted identically into both engines."""
+    import jax.numpy as jnp
+
+    wl = _vworkload()
+    arr = SCENARIO_ZOO["shared_berkeley"].build(
+        len(wl), duration_s=300, mean_rps=200.0, seed=7
+    )
+    base = vcatalog.as_arrays(wl)["base_idx"].astype(np.int64)
+
+    def script(t, A, xp=np):
+        # t=5: request variant 0 (a real move for archs whose base > 0);
+        # t=10 (< 5+60 swap latency): re-target CURRENT -> cancel;
+        # t=100: request variant 0 again -> completes at tick 160
+        b = base if xp is np else jnp.asarray(base)
+        zero = xp.zeros(A, dtype=xp.int64)
+        hold = zero - 1
+        return xp.where(
+            t == 10, b,
+            xp.where((t == 5) | (t == 100), zero, hold),
+        ).astype(xp.int64)
+
+    np_pol, jx_apply = _scripted_pair(script)
+    sim, res = _scripted_parity(arr, wl, vcatalog, np_pol, jx_apply)
+    # exactly one completed swap per arch whose base isn't variant 0:
+    # the canceled first request must never land
+    assert res["summary"]["variant_swaps"] == int((base != 0).sum())
+    assert not sim.swap.in_flight.any()
+
+
+def test_swap_lands_on_final_tick(vcatalog):
+    """A swap maturing exactly on the last tick pops during that tick's
+    step (the arch serves at the new rate through the end-of-trace
+    expired sweep), and a request issued ON the final tick stays in
+    flight forever — both engines agree on the resulting ledger."""
+    import jax.numpy as jnp
+
+    wl = _vworkload()
+    T = 200
+    arr = SCENARIO_ZOO["flash_correlated"].build(
+        len(wl), duration_s=T, mean_rps=250.0, seed=13
+    )
+    va = vcatalog.as_arrays(wl)
+    base = va["base_idx"].astype(np.int64)
+    top = (va["n_variants"] - 1).astype(np.int64)
+    land = T - 1 - 60    # ready_at == T-1: pops on the final tick
+
+    def script(t, A, xp=np):
+        to = top if xp is np else jnp.asarray(top)
+        zero = xp.zeros(A, dtype=xp.int64)
+        hold = zero - 1
+        return xp.where(
+            t == land, zero, xp.where(t == T - 1, to, hold)
+        ).astype(xp.int64)
+
+    np_pol, jx_apply = _scripted_pair(script)
+    sim, res = _scripted_parity(arr, wl, vcatalog, np_pol, jx_apply)
+    # the landing request popped (once per arch whose base != 0); the
+    # final-tick request entered the pipeline AFTER the pop and is
+    # still in flight at the sweep
+    assert res["summary"]["variant_swaps"] == int((base != 0).sum())
+    assert sim.swap.in_flight.any()
+
+
+def test_swap_request_on_reclaim_tick(vcatalog):
+    """Swap requests issued every tick while spot/harvest churn (reclaims
+    and evictions co-occur with swap traffic): the two engines must
+    stay ledger-identical through the interleaving."""
+    wl = _vworkload()
+    arr = SCENARIO_ZOO["mmpp_bursts"].build(
+        len(wl), duration_s=400, mean_rps=300.0, seed=17
+    )
+
+    def script(t, A, xp=np):
+        # oscillate requests: variant 0 on even phases, hold on odd —
+        # guarantees requests coincide with whatever reclaim ticks the
+        # seeded spot/harvest processes produce
+        req = xp.where((t % 7) < 3, 0, -1)
+        if xp is np:
+            return np.full(A, int(req), dtype=np.int64)
+        return xp.broadcast_to(req, (A,)).astype(xp.int64)
+
+    np_pol, jx_apply = _scripted_pair(script, spot=3, harvest=2)
+    sim, res = _scripted_parity(arr, wl, vcatalog, np_pol, jx_apply)
+    assert sim.res.preemptions > 0, "no reclaim landed — edge not exercised"
+    assert res["summary"]["variant_swaps"] > 0
+
+
+# ---------------------------------------------------------------------------
 # Pytree / jit machinery.
 # ---------------------------------------------------------------------------
 def test_simstate_pytree_roundtrip():
@@ -224,8 +478,11 @@ def test_simstate_pytree_roundtrip():
     # empty (None) subtree and contributes no leaf
     _, state0, _ = je.build_sim_inputs(arr, _workload(A))
     assert state0.ewma is None
+    # catalog-free runs also leave the 4 variant-swap slots as empty
+    # (None) subtrees
+    n_var = 4
     leaves, treedef = jax.tree.flatten(state0)
-    assert len(leaves) == len(je.SimState._fields) - 1
+    assert len(leaves) == len(je.SimState._fields) - 1 - n_var
     rebuilt = jax.tree.unflatten(treedef, leaves)
     assert isinstance(rebuilt, je.SimState)
     for a, b in zip(jax.tree.leaves(rebuilt), leaves):
@@ -234,7 +491,15 @@ def test_simstate_pytree_roundtrip():
     _, state0, xs = je.build_sim_inputs(arr, _workload(A), needs_stats=False)
     assert state0.ewma is not None and "ewma" not in xs
     leaves, _ = jax.tree.flatten(state0)
-    assert len(leaves) == len(je.SimState._fields)
+    assert len(leaves) == len(je.SimState._fields) - n_var
+    # variant-catalog run: the swap pipeline fills every slot
+    from repro.core.sim import VariantCatalog
+    _, state0, _ = je.build_sim_inputs(
+        arr, _workload(A), catalog=VariantCatalog.for_workload(_workload(A))
+    )
+    leaves, _ = jax.tree.flatten(state0)
+    assert len(leaves) == len(je.SimState._fields) - 1
+    assert state0.var_pending is not None and (state0.var_pending == -1).all()
 
 
 def test_smoke_recompile_guard():

@@ -401,7 +401,7 @@ def test_retrace_warns_once_per_key():
     wl = uniform_pool_workload(POOL[:2], strict_frac=0.25)
     arr = SCENARIO_ZOO["mmpp_bursts"].build(2, duration_s=60, mean_rps=60.0)
     je.run_scenario(arr, wl, "reactive")
-    key = ("reactive", "sum", False, "opt")
+    key = ("reactive", "sum", False, "opt", False)
     n = je.runner_trace_count(*key)
     assert n >= 1
     # pretend the key was seen at a lower trace count: the next use must
@@ -413,6 +413,64 @@ def test_retrace_warns_once_per_key():
     with warnings.catch_warnings():
         warnings.simplefilter("error")
         assert je.note_runner_use(*key) == n
+
+
+def test_jax_trajectory_variant_gauges():
+    """Variant-catalog trajectory runs expose the per-tick variant gauges
+    (active index, swap-in-flight flag, delivered-accuracy rate) and stay
+    summary-identical to sum mode — the gauge channels must not perturb
+    the reduction."""
+    from repro.core.sim import jax_engine as je
+
+    wl = [dataclasses.replace(w, min_accuracy=0.55)
+          for w in uniform_pool_workload(POOL[:4], strict_frac=0.25)]
+    catalog = VariantCatalog.for_workload(wl)
+    arr = SCENARIO_ZOO["trending_hotswap"].build(4, duration_s=300,
+                                                 mean_rps=300.0)
+    base = je.run_scenario(arr, wl, "infaas_variant", catalog=catalog)
+    traj = je.run_scenario(arr, wl, "infaas_variant", catalog=catalog,
+                           record_trajectory=True)
+
+    assert set(base["summary"]) == set(traj["summary"])
+    for k, v in base["summary"].items():
+        np.testing.assert_allclose(traj["summary"][k], v, rtol=1e-6,
+                                   err_msg=k)
+    series = traj["trajectory"]
+    for k in ("active_variant", "swap_in_flight", "acc_rate", "swaps"):
+        assert k in series, k
+    for k in ("active_variant", "swap_in_flight", "acc_rate"):
+        assert np.asarray(series[k]).shape == (300, 4), k
+    # flows still sum to the ledger; gauges describe states
+    assert int(np.asarray(series["swaps"]).sum()) == base["summary"][
+        "variant_swaps"]
+    assert base["summary"]["variant_swaps"] > 0
+    # the gauge channels are consistent with each other: while a swap is
+    # in flight the delivered accuracy still reflects the OLD variant
+    acc = np.asarray(series["acc_rate"])
+    active = np.asarray(series["active_variant"])
+    assert (acc > 0).all()
+    vmax = max(len(vs) for vs in catalog.per_arch.values())
+    assert active.min() >= 0 and (active < vmax).all()
+
+
+def test_recorder_acc_rate_on_catalog_run():
+    """The NumPy recorder's delivered-accuracy gauge mirrors the JAX
+    ``acc_rate`` trajectory channel: populated on catalog runs and
+    exported by ``as_dict``."""
+    wl = [dataclasses.replace(w, min_accuracy=0.55)
+          for w in uniform_pool_workload(POOL[:4], strict_frac=0.25)]
+    catalog = VariantCatalog.for_workload(wl)
+    tel = Telemetry(events=False)
+    _run("trending_hotswap", "infaas_variant", 300, telemetry=tel,
+         catalog=catalog, wl=wl)
+    rec = tel.recorder
+    d = rec.as_dict()
+    assert "acc_rate" in d and "active_variant" in d
+    assert d["acc_rate"].shape == (300, 4)
+    assert (d["acc_rate"] > 0).all()
+    # the gauge tracks the post-swap effective accuracy, so any tick
+    # after a swap lands must show the new variant's accuracy
+    assert d["active_variant"].shape == (300, 4)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,7 @@ import glob
 import json
 import os
 import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from benchmarks.common import Row, print_rows, write_artifact
 from repro.configs import INPUT_SHAPES, get_config

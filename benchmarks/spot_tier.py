@@ -12,7 +12,6 @@ floor quantizes the saving away (reported separately).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import List
 

@@ -8,7 +8,6 @@ compare the measured queue behaviour against what the profile predicted.
   PYTHONPATH=src python examples/serve_trace.py --arch qwen1.5-0.5b
 """
 import argparse
-import time
 
 import jax
 import numpy as np

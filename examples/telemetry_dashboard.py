@@ -52,7 +52,6 @@ def spark(series: np.ndarray, width: int = WIDTH, reduce: str = "mean") -> str:
     if x.size == 0:
         return " " * width
     edges = np.linspace(0, x.size, width + 1).astype(int)
-    agg = np.maximum if reduce == "max" else None
     cols = np.array([
         (x[a:b].max() if reduce == "max" else x[a:b].mean()) if b > a else 0.0
         for a, b in zip(edges[:-1], edges[1:])

@@ -28,7 +28,6 @@ the cost/accuracy frontier:
 import argparse
 import dataclasses
 
-import numpy as np
 
 from repro.core import get_scenario
 from repro.core.schedulers import VECTOR_SCHEDULERS

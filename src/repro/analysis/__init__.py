@@ -1,0 +1,43 @@
+"""repro.analysis — the invariant linter for the sim core.
+
+An AST-based static analyzer enforcing the cross-layer contracts the
+runtime test suite can only probe pointwise: registry twinning,
+jit-scope hygiene, seeded determinism, telemetry guarding and PoolObs
+aliasing discipline.  Run it as::
+
+    PYTHONPATH=src python -m repro.analysis src/
+
+See docs/STATIC_ANALYSIS.md for the pass catalog and baseline policy.
+"""
+from repro.analysis.base import (
+    AnalysisContext,
+    Finding,
+    LintPass,
+    Module,
+    PASS_REGISTRY,
+    register_pass,
+    run_passes,
+)
+from repro.analysis.baseline import (
+    DEFAULT_BASELINE,
+    BaselineEntry,
+    BaselineError,
+    apply_baseline,
+    load_baseline,
+)
+import repro.analysis.passes  # noqa: F401  (import = pass registration)
+
+__all__ = [
+    "AnalysisContext",
+    "Finding",
+    "LintPass",
+    "Module",
+    "PASS_REGISTRY",
+    "register_pass",
+    "run_passes",
+    "DEFAULT_BASELINE",
+    "BaselineEntry",
+    "BaselineError",
+    "apply_baseline",
+    "load_baseline",
+]

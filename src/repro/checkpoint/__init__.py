@@ -1,1 +1,5 @@
-from repro.checkpoint.checkpoint import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

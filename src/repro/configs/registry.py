@@ -12,9 +12,8 @@ model-selection experiments, and memory footprints for the cost model).
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
 
 # ---------------------------------------------------------------------------
 # Block kinds understood by the model builder.

@@ -19,7 +19,7 @@ accuracy axes cannot drift.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core.profiles import RequestClass, STANDARD, model_pool
 from repro.core.sim.types import filter_pool_candidates

@@ -34,7 +34,6 @@ Arrivals come in two shapes (``trace`` argument):
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -59,7 +58,6 @@ from repro.core.sim.types import (
     Action,
     ArchLoad,
     ArchObs,
-    Policy,
     PoolAction,
     PoolObs,
     VariantCatalog,

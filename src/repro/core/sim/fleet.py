@@ -19,7 +19,6 @@ flight, so a tick is O(A) NumPy work regardless of pool size.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import numpy as np
 

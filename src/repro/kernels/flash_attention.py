@@ -13,7 +13,6 @@ Validated on CPU with ``interpret=True`` against ``ref.mha_reference``.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

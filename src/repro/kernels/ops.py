@@ -9,7 +9,6 @@
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

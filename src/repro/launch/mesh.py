@@ -9,7 +9,7 @@ Target fleet: TPU v5e.  Single pod = 16x16 = 256 chips
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

@@ -7,14 +7,13 @@ parameter sets are never allocated.  The dry-run lowers
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.registry import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.registry import InputShape, ModelConfig
 from repro.distributed.sharding import AxisRules, logical_to_spec
 from repro.launch.mesh import make_rules
 from repro.models import model as model_lib

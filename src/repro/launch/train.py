@@ -13,7 +13,6 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.training.data import SyntheticLM

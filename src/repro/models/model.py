@@ -29,7 +29,7 @@ from repro.configs.registry import ATTN, LOCAL_ATTN, RGLRU, RWKV, ModelConfig
 from repro.distributed.sharding import shard
 from repro.models import attention as attn_lib
 from repro.models import griffin, layers, moe as moe_lib, rwkv as rwkv_lib
-from repro.models.params import Boxed, axes_of, is_boxed, unbox, values_of
+from repro.models.params import Boxed, axes_of, is_boxed, values_of
 
 
 # ---------------------------------------------------------------------------

@@ -18,8 +18,7 @@ E · Σ_e f_e·p_e) used by the training substrate.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ Token-shift states hold the *normed* inputs, so prefill and decode agree.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

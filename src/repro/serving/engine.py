@@ -9,10 +9,8 @@ this engine, and ``max_concurrency`` from the profile is its slot count.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp

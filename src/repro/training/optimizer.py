@@ -6,7 +6,6 @@ single-pod HBM budget (see EXPERIMENTS.md §Dry-run).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 

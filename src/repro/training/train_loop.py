@@ -1,9 +1,8 @@
 """Training step + loop."""
 from __future__ import annotations
 
-import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import jax

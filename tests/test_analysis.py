@@ -1,0 +1,493 @@
+"""repro.analysis: each pass catches its seeded violation, stays silent
+on the compliant idiom, and the real tree is clean modulo the baseline.
+
+Fixture trees are written to tmp_path (``src/`` + optional ``tests/``)
+and analyzed through the same :class:`AnalysisContext` the CLI uses, so
+these tests cover the full parse → pass → finding-key pipeline.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import (
+    AnalysisContext,
+    BaselineError,
+    PASS_REGISTRY,
+    apply_baseline,
+    load_baseline,
+    run_passes,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ALL_PASSES = ("registry-parity", "jit-hygiene", "determinism",
+              "telemetry-guard", "soa-aliasing")
+
+
+def _ctx(tmp_path, files):
+    """Write ``{relpath: source}`` under tmp_path, analyze its src/."""
+    for rel, source in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(source))
+    return AnalysisContext([str(tmp_path / "src")], repo_root=str(tmp_path))
+
+
+def _run(tmp_path, files, select):
+    return run_passes(_ctx(tmp_path, files), select=[select])
+
+
+def _slugs(findings):
+    return {f.slug for f in findings}
+
+
+def test_pass_registry_is_complete():
+    assert tuple(PASS_REGISTRY) == ALL_PASSES
+    for lp in PASS_REGISTRY.values():
+        assert lp.description
+
+
+# ---------------------------------------------------------------------------
+# registry-parity
+# ---------------------------------------------------------------------------
+def test_registry_parity_flags_missing_twins(tmp_path):
+    findings = _run(tmp_path, {
+        "src/regs.py": """
+            SCHEDULERS = {"reactive": 1}
+            VECTOR_SCHEDULERS = {"reactive": 2}
+            VECTOR_SCHEDULERS["soa_only"] = 3
+            JAX_POLICIES = {"reactive": 4, "scan_only": 5}
+        """,
+    }, "registry-parity")
+    assert _slugs(findings) == {
+        "vector-soa_only-missing-dict-twin",
+        "jax-scan_only-missing-vector-twin",
+    }
+    # stable keys: pass:path:slug, no line numbers
+    assert all(f.key.startswith("registry-parity:") for f in findings)
+
+
+def test_registry_parity_flags_stale_test_parametrization(tmp_path):
+    findings = _run(tmp_path, {
+        "src/regs.py": 'SCHEDULERS = {"reactive": 1}\n',
+        "tests/test_parity.py": """
+            import pytest
+
+            @pytest.mark.parametrize("policy", ["reactive", "ghost"])
+            def test_p(policy):
+                pass
+        """,
+    }, "registry-parity")
+    assert _slugs(findings) == {"test-param-ghost-unregistered"}
+
+
+def test_registry_parity_silent_on_twinned_registries(tmp_path):
+    findings = _run(tmp_path, {
+        "src/regs.py": """
+            SCHEDULERS = {"reactive": 1, "paragon": 2}
+            VECTOR_SCHEDULERS = {"reactive": 3, "paragon": 4}
+            JAX_POLICIES = {"reactive": 5}
+        """,
+        "tests/test_parity.py": """
+            import pytest
+
+            @pytest.mark.parametrize("policy", ["reactive", "paragon"])
+            def test_p(policy):
+                pass
+
+            @pytest.mark.parametrize("policy", sorted({"computed"}))
+            def test_computed(policy):   # non-literal lists are skipped
+                pass
+        """,
+    }, "registry-parity")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# jit-hygiene
+# ---------------------------------------------------------------------------
+def test_jit_hygiene_flags_host_syncs_and_branches(tmp_path):
+    findings = _run(tmp_path, {
+        "src/hot.py": """
+            import jax
+            import jax.numpy as jnp
+            import numpy as np
+
+            @jax.jit
+            def step(x):
+                if x > 0:
+                    x = np.maximum(x, 0.0)
+                y = x.item()
+                return float(x) + y
+        """,
+    }, "jit-hygiene")
+    assert _slugs(findings) == {
+        "step-python-if-on-traced",
+        "step-np-on-traced-maximum",
+        "step-host-sync-item",
+        "step-host-sync-float",
+    }
+
+
+def test_jit_hygiene_follows_scan_vmap_and_jaxpolicy_roots(tmp_path):
+    findings = _run(tmp_path, {
+        "src/engine.py": """
+            import jax
+            from helpers import shared
+
+            def body(carry, x):
+                return shared(carry), x
+
+            def run(xs):
+                return jax.lax.scan(body, 0.0, xs)
+
+            JAX_POLICIES = {"p": JaxPolicy(pol)}
+
+            def pol(state):
+                return state.q.item()
+        """,
+        "src/helpers.py": """
+            def shared(c):
+                while c:
+                    c = c - 1
+                return c
+        """,
+    }, "jit-hygiene")
+    assert _slugs(findings) == {
+        "shared-python-while-on-traced",   # cross-module via from-import
+        "pol-host-sync-item",              # JaxPolicy apply root
+    }
+
+
+def test_jit_hygiene_flags_unhashable_static_arg(tmp_path):
+    findings = _run(tmp_path, {
+        "src/hot.py": """
+            from functools import partial
+            import jax
+
+            @partial(jax.jit, static_argnames=("cfg",))
+            def update(x, cfg):
+                return x
+
+            update(1.0, cfg={"lr": 0.1})
+        """,
+    }, "jit-hygiene")
+    assert _slugs(findings) == {"unhashable-static-update-cfg"}
+
+
+def test_jit_hygiene_silent_on_compliant_jit_code(tmp_path):
+    findings = _run(tmp_path, {
+        "src/hot.py": """
+            from functools import partial
+            import jax
+            import jax.numpy as jnp
+            import numpy as np
+
+            @partial(jax.jit, static_argnames=("mode",))
+            def step(x, key, mode, lazy: bool, xp=np, unroll=4):
+                if mode == "fast":          # static_argnames
+                    x = jnp.maximum(x, 0.0)
+                if lazy:                    # bool-annotated = static flag
+                    x = x * 2
+                if xp is np:                # identity check = trace-time
+                    pass
+                if x.shape[0] > unroll:     # shapes are static
+                    x = x[:unroll]
+                return jnp.where(x > 0, x, 0.0)
+        """,
+    }, "jit-hygiene")
+    assert findings == []
+
+
+def test_jit_hygiene_ignores_host_side_code(tmp_path):
+    findings = _run(tmp_path, {
+        "src/host.py": """
+            import numpy as np
+
+            def summarize(xs):            # never jitted: np/if/float fine
+                if xs.size:
+                    return float(np.mean(xs))
+                return 0.0
+        """,
+    }, "jit-hygiene")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_determinism_flags_global_state_randomness(tmp_path):
+    findings = _run(tmp_path, {
+        "src/bad.py": """
+            import random
+            import time
+            import numpy as np
+
+            def draw(n):
+                seed = time.time()
+                np.random.seed(int(seed))
+                return np.random.rand(n) + random.random()
+        """,
+    }, "determinism")
+    assert _slugs(findings) == {
+        "draw-np-random-seed",
+        "draw-np-random-rand",
+        "draw-stdlib-random-random",
+        "draw-clock-seed",
+    }
+
+
+def test_determinism_flags_from_random_import(tmp_path):
+    findings = _run(tmp_path, {
+        "src/bad.py": "from random import shuffle\n",
+    }, "determinism")
+    assert _slugs(findings) == {"from-random-import"}
+
+
+def test_determinism_silent_on_seeded_generators(tmp_path):
+    findings = _run(tmp_path, {
+        "src/good.py": """
+            import time
+            import numpy as np
+            import jax
+
+            def draw(n, seed):
+                rng = np.random.default_rng(seed)
+                key = jax.random.PRNGKey(seed)
+                t0 = time.perf_counter()      # timing, not seeding
+                out = rng.normal(size=n) + jax.random.uniform(key, (n,))
+                return out, time.perf_counter() - t0
+        """,
+    }, "determinism")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# telemetry-guard
+# ---------------------------------------------------------------------------
+_TEL = """
+    EV_ARRIVAL = "arrival"
+    EVENT_TYPES = {EV_ARRIVAL: "arrivals this tick", "serve": "served"}
+
+    class Telemetry:
+        def emit(self, tick, etype, value):
+            pass
+"""
+
+
+def test_telemetry_guard_flags_unguarded_emission(tmp_path):
+    findings = _run(tmp_path, {
+        "src/tel.py": _TEL,
+        "src/engine.py": """
+            def step(self, tick):
+                tel = self.telemetry
+                tel.emit(tick, "arrival", 1)
+        """,
+    }, "telemetry-guard")
+    assert _slugs(findings) == {"unguarded-step-emit"}
+
+
+def test_telemetry_guard_flags_unknown_etype_and_ev_const(tmp_path):
+    findings = _run(tmp_path, {
+        "src/tel.py": _TEL + '\n    EV_GHOST = "ghost"\n',
+        "src/engine.py": """
+            def step(self, tick):
+                tel = self.telemetry
+                if tel is not None:
+                    tel.emit(tick, "arival", 1)   # typo'd etype
+        """,
+    }, "telemetry-guard")
+    assert _slugs(findings) == {
+        "etype-const-EV_GHOST-undocumented",
+        "etype-arival-unknown",
+    }
+
+
+def test_telemetry_guard_silent_on_guarded_idioms(tmp_path):
+    findings = _run(tmp_path, {
+        "src/tel.py": _TEL,
+        "src/engine.py": """
+            def a(self, tick):
+                tel = self.telemetry
+                if tel is not None:
+                    tel.emit(tick, "arrival", 1)
+
+            def b(self, tick):
+                if self.telemetry is not None:
+                    self.telemetry.emit(tick, "serve", 2)
+
+            def c(self, tick, tel):
+                if tel is None:
+                    return
+                tel.emit(tick, "arrival", 3)
+
+            def d(self, tick, tel, extra):
+                if tel is not None and extra:
+                    tel.emit(tick, "serve", 4)
+        """,
+    }, "telemetry-guard")
+    assert findings == []
+
+
+def test_telemetry_guard_flags_undocumented_summary_key(tmp_path):
+    findings = _run(tmp_path, {
+        "src/acct.py": """
+            SUMMARY_KEY_DOCS = {
+                "total_cost": "ledger total",
+                "cost_<tier>": "per-tier cost",
+            }
+
+            class SimResult:
+                def summary(self):
+                    s = {
+                        "total_cost": 1.0,
+                        "mystery": 2.0,
+                        **{f"cost_{t}": 0.0 for t in ("od",)},
+                    }
+                    s["also_undocumented"] = 3.0
+                    return s
+        """,
+    }, "telemetry-guard")
+    assert _slugs(findings) == {
+        "summary-key-mystery-undocumented",
+        "summary-key-also_undocumented-undocumented",
+    }
+
+
+# ---------------------------------------------------------------------------
+# soa-aliasing
+# ---------------------------------------------------------------------------
+_POOLOBS = """
+    class PoolObs:
+        rate: object
+        backlog: object
+
+        def copy(self):
+            return self
+"""
+
+
+def test_soa_aliasing_flags_uncopied_field_store(tmp_path):
+    findings = _run(tmp_path, {
+        "src/types.py": _POOLOBS,
+        "src/agent.py": """
+            class Agent:
+                def step(self):
+                    obs = self.sim.observe_pool()
+                    self._prev_rate = obs.rate      # aliases scratch
+        """,
+    }, "soa-aliasing")
+    assert _slugs(findings) == {"step-_prev_rate-aliases-rate"}
+
+
+def test_soa_aliasing_silent_on_copy_and_locals(tmp_path):
+    findings = _run(tmp_path, {
+        "src/types.py": _POOLOBS,
+        "src/agent.py": """
+            class Agent:
+                def step(self):
+                    obs = self.sim.observe_pool()
+                    self._prev_rate = obs.rate.copy()   # snapshot
+                    self._pobs = self.sim.observe_pool()  # whole handle
+                    rate = obs.rate                     # dies this tick
+                    return rate
+        """,
+    }, "soa-aliasing")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# baseline mechanics
+# ---------------------------------------------------------------------------
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "baseline.txt"
+    p.write_text("determinism:src/x.py:some-slug\n")
+    with pytest.raises(BaselineError):
+        load_baseline(str(p))
+
+
+def test_baseline_matches_by_stable_key_and_reports_stale(tmp_path):
+    p = tmp_path / "baseline.txt"
+    p.write_text(
+        "determinism:src/bad.py:draw-np-random-rand  # legacy shim\n"
+        "determinism:src/bad.py:gone-finding  # fixed long ago\n")
+    findings = _run(tmp_path, {
+        "src/bad.py": """
+            import numpy as np
+
+            def draw(n):
+                return np.random.rand(n)
+        """,
+    }, "determinism")
+    new, baselined, stale = apply_baseline(findings, load_baseline(str(p)))
+    assert new == []
+    assert [f.slug for f in baselined] == ["draw-np-random-rand"]
+    assert [e.key for e in stale] == ["determinism:src/bad.py:gone-finding"]
+
+
+def test_parse_errors_are_reported_as_findings(tmp_path):
+    ctx = _ctx(tmp_path, {"src/broken.py": "def f(:\n"})
+    findings = run_passes(ctx)
+    assert [f.slug for f in findings] == ["syntax-error"]
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean modulo the checked-in baseline
+# ---------------------------------------------------------------------------
+def test_repo_src_is_clean_against_baseline():
+    ctx = AnalysisContext([os.path.join(REPO, "src")], repo_root=REPO)
+    findings = run_passes(ctx)
+    entries = load_baseline(os.path.join(REPO, "analysis_baseline.txt"))
+    new, baselined, stale = apply_baseline(findings, entries)
+    assert new == [], "\n".join(f.format_text() for f in new)
+    assert stale == [], [e.key for e in stale]
+    # the two deliberate registry exceptions stay pinned
+    assert sorted(f.slug for f in baselined) == [
+        "jax-rl_sample-missing-vector-twin",
+        "vector-rl_pool-missing-dict-twin",
+    ]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def _cli(*args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_exits_zero_on_clean_tree():
+    r = _cli("src")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 finding(s)" in r.stderr
+    assert "2 baselined" in r.stderr
+
+
+def test_cli_github_format_emits_annotations():
+    r = _cli("src", "--format", "github", "--baseline", "none",
+             "--select", "registry-parity")
+    assert r.returncode == 1
+    lines = [ln for ln in r.stdout.splitlines() if ln]
+    assert lines, r.stderr
+    for ln in lines:
+        assert ln.startswith("::error file=")
+        assert "title=repro.analysis registry-parity" in ln
+
+
+def test_cli_lists_passes():
+    r = _cli("--list")
+    assert r.returncode == 0
+    for pid in ALL_PASSES:
+        assert pid in r.stdout
+
+
+def test_cli_rejects_unknown_pass():
+    r = _cli("src", "--select", "no-such-pass")
+    assert r.returncode == 2
+    assert "unknown pass" in r.stderr

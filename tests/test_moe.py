@@ -1,11 +1,9 @@
 """MoE dispatch paths: sort-based capacity == dense oracle; EP all_to_all."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import get_config
 from repro.configs.registry import ModelConfig
 from repro.models import moe as moe_lib
 

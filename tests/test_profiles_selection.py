@@ -6,14 +6,11 @@ from repro.configs import list_architectures
 from repro.core.model_selection import (
     Constraint,
     NoFeasibleModel,
-    feasible_set,
-    select_naive,
     select_paragon,
 )
 from repro.core.profiles import (
     STANDARD,
     ModelProfile,
-    RequestClass,
     get_profile,
     iso_accuracy_set,
     iso_latency_set,

@@ -2,7 +2,6 @@
 property tests live in test_properties.py)."""
 import dataclasses
 
-import numpy as np
 import pytest
 
 from repro.core.hardware import PRICING

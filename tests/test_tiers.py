@@ -3,7 +3,6 @@ every tier, the harvest / multi-region tiers, the burst cold-batch and
 spot in-flight-preemption bugfixes, the portfolio scheduler, and the RL
 spot head."""
 import dataclasses
-import math
 
 import numpy as np
 import pytest

@@ -17,7 +17,6 @@ from repro.core.sim import (
     PoolAction,
     ServingSim,
     SwapPipeline,
-    Variant,
     VariantCatalog,
     filter_pool_candidates,
     simulate,
